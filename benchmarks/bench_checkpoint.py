@@ -1,0 +1,43 @@
+"""Checkpoint compression sweep — the bitstream-compression analogue
+(DESIGN.md §3): bytes + save/load wall time per mode for a reduced model."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.checkpoint import serializer
+
+
+def rows() -> list[tuple[str, float, str]]:
+    # realistic weight matrices (lane-aligned, large enough to quantize)
+    import jax.numpy as jnp
+
+    key = jax.random.PRNGKey(0)
+    params = {
+        f"layer{i}": {
+            "w": jax.random.normal(jax.random.fold_in(key, i), (1024, 1536), jnp.bfloat16)
+            * 0.02,
+            "scale": jnp.ones((1024,), jnp.float32),
+        }
+        for i in range(4)
+    }
+    raw = sum(jax.device_get(l).nbytes for l in jax.tree.leaves(params))
+    out = []
+    for mode in serializer.MODES:
+        t0 = time.perf_counter()
+        blob = serializer.serialize(params, mode=mode)
+        t_ser = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        restored = serializer.deserialize(blob, params)
+        t_de = time.perf_counter() - t0
+        assert jax.tree.structure(restored) == jax.tree.structure(params)
+        out.append(
+            (
+                f"checkpoint[{mode}]",
+                t_ser * 1e6,
+                f"ratio={raw/len(blob):.2f}x bytes={len(blob)} "
+                f"load_us={t_de*1e6:.0f}",
+            )
+        )
+    return out

@@ -1,0 +1,47 @@
+"""Experiment 1 (Fig. 7 / Table 1): configuration-parameter sweep."""
+from __future__ import annotations
+
+import time
+
+from repro.core import (
+    BEST_PARAMS,
+    SPARTAN7_XC7S15,
+    SPARTAN7_XC7S25,
+    WORST_PARAMS,
+    energy_reduction_factor,
+    sweep_config_space,
+    time_reduction_factor,
+)
+
+
+def rows() -> list[tuple[str, float, str]]:
+    out = []
+    for dev in (SPARTAN7_XC7S15, SPARTAN7_XC7S25):
+        t0 = time.perf_counter()
+        pts = sweep_config_space(dev)
+        us = (time.perf_counter() - t0) * 1e6 / len(pts)
+        best = min(pts, key=lambda s: s.config_energy_mj)
+        worst = max(pts, key=lambda s: s.config_energy_mj)
+        out.append(
+            (
+                f"exp1_sweep[{dev.name}]",
+                us,
+                f"best={best.config_energy_mj:.2f}mJ@"
+                f"w{best.params.buswidth}/f{best.params.clock_mhz}/c{int(best.params.compression)} "
+                f"worst={worst.config_energy_mj:.2f}mJ "
+                f"energy_x={energy_reduction_factor(dev):.2f} "
+                f"time_x={time_reduction_factor(dev):.2f}",
+            )
+        )
+    return out
+
+
+def print_table() -> None:
+    dev = SPARTAN7_XC7S15
+    print("buswidth clock_MHz compressed | time_ms power_mW energy_mJ")
+    for s in sweep_config_space(dev):
+        p = s.params
+        print(
+            f"{p.buswidth:8d} {p.clock_mhz:9.0f} {int(p.compression):10d} | "
+            f"{s.config_time_ms:8.2f} {s.config_power_mw:8.1f} {s.config_energy_mj:9.2f}"
+        )

@@ -1,0 +1,74 @@
+"""Kernel micro-benchmarks: XLA-path wall time on CPU + per-call bytes.
+
+(The Pallas kernels target TPU; interpret mode is a correctness harness,
+not a timing one — timings here are the XLA reference path, the derived
+column reports arithmetic intensity for the TPU roofline.)"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _time(f, *args, reps=5) -> float:
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def rows() -> list[tuple[str, float, str]]:
+    out = []
+    key = jax.random.PRNGKey(0)
+
+    # flash attention (XLA ref path)
+    from repro.kernels.flash_attention import ops as attn
+
+    B, S, H, KVH, D = 1, 1024, 8, 2, 64
+    q = jax.random.normal(key, (B, S, H, D), jnp.bfloat16)
+    k = jax.random.normal(key, (B, S, KVH, D), jnp.bfloat16)
+    v = jax.random.normal(key, (B, S, KVH, D), jnp.bfloat16)
+    f = jax.jit(lambda q, k, v: attn.attention(q, k, v, impl="xla"))
+    us = _time(f, q, k, v)
+    flops = 4 * B * S * S * H * D
+    out.append(("flash_attention_xla", us, f"gflop={flops/1e9:.2f} S={S} H={H}"))
+
+    # SSD (chunked XLA path)
+    from repro.kernels.ssd import ops as ssd
+
+    B2, S2, H2, P2, G2, N2 = 1, 2048, 8, 64, 1, 64
+    ks = jax.random.split(key, 6)
+    x = jax.random.normal(ks[0], (B2, S2, H2, P2), jnp.bfloat16)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B2, S2, H2)))
+    a = -jnp.exp(jax.random.normal(ks[2], (H2,)))
+    bm = jax.random.normal(ks[3], (B2, S2, G2, N2))
+    cm = jax.random.normal(ks[4], (B2, S2, G2, N2))
+    dv = jax.random.normal(ks[5], (H2,))
+    g = jax.jit(lambda *a_: ssd.ssd(*a_, impl="xla")[0])
+    us = _time(g, x, dt, a, bm, cm, dv)
+    out.append(("ssd_chunked_xla", us, f"S={S2} H={H2} P={P2} N={N2}"))
+
+    # LSTM (paper accelerator, XLA scan path)
+    from repro.kernels.lstm import ops as lstm
+
+    B3, S3, I3, H3 = 1, 64, 6, 20
+    x3 = jax.random.normal(key, (B3, S3, I3))
+    wih = jax.random.normal(key, (I3, 4 * H3)) * 0.3
+    whh = jax.random.normal(key, (H3, 4 * H3)) * 0.3
+    b3 = jnp.zeros((4 * H3,))
+    h = jax.jit(lambda *a_: lstm.lstm(*a_, impl="xla")[0])
+    us = _time(h, x3, wih, whh, b3)
+    out.append(("lstm_xla", us, f"paper h{H3} S={S3} (FPGA: 28.1 µs)"))
+
+    # dequant (checkpoint decompression path)
+    from repro.kernels.dequant import ops as dq
+
+    w = jax.random.normal(key, (1024, 4096))
+    qq, sc = dq.quantize_blocked(w)
+    d = jax.jit(lambda q_, s_: dq.dequantize(q_, s_, impl="xla"))
+    us = _time(d, qq, sc)
+    out.append(("dequant_int8_xla", us, f"MB={w.size*2/1e6:.1f} (bf16 out)"))
+    return out

@@ -1,0 +1,73 @@
+"""Experiment 3 (Table 3, Figs. 10-11): idle power-saving methods."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (
+    CALIBRATED_POWERUP_OVERHEAD_MJ as CAL,
+    IDLE_POWER_MW,
+    IdlePowerMethod,
+    crossover_period_ms,
+    idle_power_saving_pct,
+    idlewait_n_max,
+    onoff_n_max,
+    paper_lstm_item,
+)
+
+
+def sweep() -> list[dict]:
+    item = paper_lstm_item()
+    periods = np.arange(10.0, 120.01, 10.0)
+    out = []
+    for method in IdlePowerMethod:
+        p_idle = IDLE_POWER_MW[method]
+        items40 = idlewait_n_max(item, 40.0, idle_power_mw=p_idle, powerup_overhead_mj=CAL)
+        hours = [
+            idlewait_n_max(item, float(t), idle_power_mw=p_idle, powerup_overhead_mj=CAL)
+            * t / 3.6e6
+            for t in periods
+        ]
+        out.append(
+            {
+                "method": method.value,
+                "idle_power_mw": p_idle,
+                "saved_pct": idle_power_saving_pct(method),
+                "items_at_40ms": items40,
+                "avg_lifetime_h": float(np.mean(hours)),
+                "crossover_ms": crossover_period_ms(
+                    item, idle_power_mw=p_idle, powerup_overhead_mj=CAL
+                ),
+            }
+        )
+    return out
+
+
+def rows() -> list[tuple[str, float, str]]:
+    t0 = time.perf_counter()
+    table = sweep()
+    us = (time.perf_counter() - t0) * 1e6 / len(table)
+    item = paper_lstm_item()
+    n_oo = onoff_n_max(item, powerup_overhead_mj=CAL)
+    base = next(r for r in table if r["method"] == "baseline")
+    m12 = next(r for r in table if r["method"] == "method1+2")
+    return [
+        (
+            "exp3_power_saving",
+            us,
+            f"m1+2_saved={m12['saved_pct']:.1f}% "
+            f"m1+2_vs_onoff={m12['items_at_40ms']/n_oo:.2f}x "
+            f"m1+2_cross={m12['crossover_ms']:.1f}ms "
+            f"m1+2_avg_life={m12['avg_lifetime_h']:.1f}h",
+        )
+    ]
+
+
+def print_table() -> None:
+    print("method     | idle_mW saved% | items@40ms avg_life_h cross_ms")
+    for r in sweep():
+        print(
+            f"{r['method']:10s} | {r['idle_power_mw']:7.1f} {r['saved_pct']:6.2f} | "
+            f"{r['items_at_40ms']:10,d} {r['avg_lifetime_h']:10.2f} {r['crossover_ms']:8.2f}"
+        )

@@ -1,0 +1,102 @@
+"""Roofline table (deliverable g): per (arch × shape × mesh) terms from the
+dry-run JSON caches (results/dryrun_single.json, results/dryrun_multi.json)."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def load(mesh: str = "single") -> dict:
+    path = os.path.join(RESULTS, f"dryrun_{mesh}.json")
+    if not os.path.exists(path):
+        return {}
+    with open(path) as f:
+        return json.load(f)
+
+
+def table(mesh: str = "single", tag: str = "baseline") -> list[dict]:
+    out = []
+    for key, rec in sorted(load(mesh).items()):
+        arch, shape, m, t = key.split("|")
+        if t != tag:
+            continue
+        row = {"arch": arch, "shape": shape, "status": rec["status"]}
+        if rec["status"] == "ok":
+            r = rec["roofline"]
+            row.update(
+                compute_s=r["compute_s"],
+                memory_s=r["memory_s"],
+                collective_s=r["collective_s"],
+                dominant=r["dominant"],
+                mfu_bound=r["mfu_bound"],
+                useful_frac=r["useful_flops_fraction"],
+                hbm_gb=rec["memory"]["per_device_total_gb"],
+            )
+        else:
+            row["reason"] = rec.get("reason", "")[:60]
+        out.append(row)
+    return out
+
+
+def rows() -> list[tuple[str, float, str]]:
+    out = []
+    for mesh, tag in (("single", "baseline"), ("multi", "baseline"), ("single_opt", "optimized")):
+        t0 = time.perf_counter()
+        tab = [r for r in table(mesh, tag) if r["status"] == "ok"]
+        us = (time.perf_counter() - t0) * 1e6 / max(len(tab), 1)
+        if not tab:
+            out.append((f"roofline[{mesh}]", us, "no dry-run cache"))
+            continue
+        worst = min(tab, key=lambda r: r["mfu_bound"])
+        coll = max(tab, key=lambda r: r["collective_s"])
+        out.append(
+            (
+                f"roofline[{mesh}]",
+                us,
+                f"cells={len(tab)} worst_mfu={worst['arch']}×{worst['shape']}"
+                f"={worst['mfu_bound']:.3f} most_coll={coll['arch']}×{coll['shape']}"
+                f"={coll['collective_s']*1e3:.1f}ms",
+            )
+        )
+    # baseline vs optimized gain summary (reproduce-then-optimize protocol)
+    base = {f"{r['arch']}|{r['shape']}": r for r in table("single") if r["status"] == "ok"}
+    opt = {
+        f"{r['arch']}|{r['shape']}": r
+        for r in table("single_opt", "optimized")
+        if r["status"] == "ok"
+    }
+    common = sorted(set(base) & set(opt))
+    if common:
+        import math
+
+        bound = lambda r: max(r["compute_s"], r["memory_s"], r["collective_s"])
+        gains = [bound(base[k]) / max(bound(opt[k]), 1e-12) for k in common]
+        geo = math.exp(sum(math.log(g) for g in gains) / len(gains))
+        best_k = common[int(max(range(len(gains)), key=lambda i: gains[i]))]
+        out.append(
+            (
+                "roofline[opt_vs_base]",
+                0.0,
+                f"cells={len(common)} geomean_gain={geo:.2f}x "
+                f"best={best_k}={max(gains):.1f}x",
+            )
+        )
+    return out
+
+
+def print_table(mesh: str = "single", tag: str = "baseline") -> None:
+    print(f"== roofline ({mesh}-pod, {tag}) ==")
+    print(f"{'arch':26s} {'shape':12s} {'dom':10s} {'comp_s':>9s} {'mem_s':>9s} "
+          f"{'coll_s':>9s} {'mfu':>6s} {'useful':>7s} {'HBM_GB':>7s}")
+    for r in table(mesh, tag):
+        if r["status"] != "ok":
+            print(f"{r['arch']:26s} {r['shape']:12s} SKIP: {r.get('reason','')}")
+            continue
+        print(
+            f"{r['arch']:26s} {r['shape']:12s} {r['dominant']:10s} "
+            f"{r['compute_s']:9.4f} {r['memory_s']:9.4f} {r['collective_s']:9.4f} "
+            f"{r['mfu_bound']:6.3f} {r['useful_frac']:7.3f} {r['hbm_gb']:7.2f}"
+        )

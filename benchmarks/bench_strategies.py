@@ -1,0 +1,58 @@
+"""Experiment 2 (Figs. 8-9): Idle-Waiting vs On-Off across request periods."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (
+    CALIBRATED_POWERUP_OVERHEAD_MJ as CAL,
+    crossover_period_ms,
+    paper_experiment,
+    paper_lstm_item,
+    simulate,
+)
+
+
+def sweep(periods_ms=None) -> list[dict]:
+    periods_ms = periods_ms if periods_ms is not None else np.arange(10.0, 120.01, 10.0)
+    out = []
+    for t in periods_ms:
+        iw = simulate(paper_experiment("idle_waiting", float(t)))
+        oo = simulate(paper_experiment("on_off", float(t)))
+        out.append(
+            {
+                "t_req_ms": float(t),
+                "iw_items": iw.n_items,
+                "onoff_items": oo.n_items,
+                "iw_lifetime_h": iw.lifetime_hours,
+                "onoff_lifetime_h": oo.lifetime_hours,
+            }
+        )
+    return out
+
+
+def rows() -> list[tuple[str, float, str]]:
+    t0 = time.perf_counter()
+    table = sweep()
+    us = (time.perf_counter() - t0) * 1e6 / len(table)
+    cross = crossover_period_ms(paper_lstm_item(), powerup_overhead_mj=CAL)
+    at40 = next(r for r in table if r["t_req_ms"] == 40.0)
+    return [
+        (
+            "exp2_strategies",
+            us,
+            f"cross={cross:.2f}ms ratio@40ms={at40['iw_items']/at40['onoff_items']:.2f} "
+            f"iw_range=[{min(r['iw_items'] for r in table)},"
+            f"{max(r['iw_items'] for r in table)}]",
+        )
+    ]
+
+
+def print_table() -> None:
+    print("T_req_ms | IW_items OnOff_items | IW_h OnOff_h")
+    for r in sweep():
+        print(
+            f"{r['t_req_ms']:8.1f} | {r['iw_items']:10,d} {r['onoff_items']:10,d} | "
+            f"{r['iw_lifetime_h']:6.2f} {r['onoff_lifetime_h']:7.2f}"
+        )

@@ -1,0 +1,71 @@
+"""Beyond-paper: the paper's analysis applied to every TPU serving cell.
+
+For each (arch × decode shape) with a dry-run record, derive the bring-up
+("configuration") parameters sweep and the Idle-Waiting crossover period —
+the paper's Table-1/Exp-2 structure at pod scale."""
+from __future__ import annotations
+
+import time
+
+from repro.configs import get_config
+from repro.core import tpu_energy as te
+from benchmarks.bench_roofline import load
+
+
+def cells(mesh: str = "single") -> list[dict]:
+    out = []
+    chips = 256 if mesh == "single" else 512
+    for key, rec in sorted(load(mesh).items()):
+        arch, shape, m, tag = key.split("|")
+        if rec["status"] != "ok" or tag != "baseline" or "decode" not in shape and "long" not in shape:
+            continue
+        cfg = get_config(arch)
+        cell = te.cell_from_roofline(cfg, chips, rec["roofline"])
+        best = te.TPU_BEST
+        worst = te.TPU_WORST
+        out.append(
+            {
+                "arch": arch,
+                "shape": shape,
+                "param_gb": cell.param_bytes / 1e9,
+                "infer_ms": cell.infer_time_ms,
+                "config_best_ms": cell.config_time_ms(best),
+                "config_worst_ms": cell.config_time_ms(worst),
+                "config_energy_x": te.energy_reduction_factor(cell),
+                "cross_baseline_ms": te.crossover_ms(cell, best, "baseline"),
+                "cross_m12_ms": te.crossover_ms(cell, best, "method1+2"),
+            }
+        )
+    return out
+
+
+def rows() -> list[tuple[str, float, str]]:
+    t0 = time.perf_counter()
+    table = cells()
+    us = (time.perf_counter() - t0) * 1e6 / max(len(table), 1)
+    if not table:
+        return [("tpu_duty_cycle", us, "no dry-run cache")]
+    big = max(table, key=lambda r: r["param_gb"])
+    return [
+        (
+            "tpu_duty_cycle",
+            us,
+            f"cells={len(table)} largest={big['arch']} "
+            f"config_energy_x={big['config_energy_x']:.2f} "
+            f"cross_base={big['cross_baseline_ms']/1e3:.1f}s "
+            f"cross_m12={big['cross_m12_ms']/1e3:.1f}s",
+        )
+    ]
+
+
+def print_table(mesh: str = "single") -> None:
+    print("== TPU duty-cycle crossover per serving cell (beyond paper) ==")
+    print(f"{'arch':26s} {'shape':12s} {'params_GB':>9s} {'infer_ms':>9s} "
+          f"{'cfg_best_s':>10s} {'cfg_x':>6s} {'cross_base_s':>12s} {'cross_m12_s':>11s}")
+    for r in cells(mesh):
+        print(
+            f"{r['arch']:26s} {r['shape']:12s} {r['param_gb']:9.1f} "
+            f"{r['infer_ms']:9.2f} {r['config_best_ms']/1e3:10.2f} "
+            f"{r['config_energy_x']:6.2f} {r['cross_baseline_ms']/1e3:12.1f} "
+            f"{r['cross_m12_ms']/1e3:11.1f}"
+        )

@@ -1,0 +1,81 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark driver:  PYTHONPATH=src python -m benchmarks.run [--tables]
+
+CSV benches (one per paper table/figure + framework substrates):
+    exp1_sweep            Fig. 7 / Table 1  configuration-parameter sweep
+    exp2_strategies       Figs. 8-9         Idle-Waiting vs On-Off
+    exp3_power_saving     Table 3, Figs 10-11  idle power-saving methods
+    roofline              deliverable g     40-cell roofline terms
+    tpu_duty_cycle        beyond paper      per-cell bring-up + crossover
+    kernels               deliverable c/d   kernel micro-benches
+    checkpoint            DESIGN §3         compression-mode sweep
+"""
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tables", action="store_true", help="print full tables")
+    ap.add_argument("--only", default=None, help="substring filter")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        bench_checkpoint,
+        bench_config_sweep,
+        bench_irregular,
+        bench_kernels,
+        bench_multi_tenant,
+        bench_power_saving,
+        bench_roofline,
+        bench_strategies,
+        bench_tpu_duty_cycle,
+    )
+
+    modules = [
+        bench_config_sweep,
+        bench_strategies,
+        bench_power_saving,
+        bench_roofline,
+        bench_tpu_duty_cycle,
+        bench_irregular,
+        bench_kernels,
+        bench_multi_tenant,
+        bench_checkpoint,
+    ]
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod in modules:
+        name = mod.__name__.split(".")[-1]
+        if args.only and args.only not in name:
+            continue
+        try:
+            for row in mod.rows():
+                print(f"{row[0]},{row[1]:.1f},{row[2]}")
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{name},nan,ERROR", file=sys.stderr)
+            traceback.print_exc()
+
+    if args.tables:
+        print()
+        bench_config_sweep.print_table()
+        print()
+        bench_strategies.print_table()
+        print()
+        bench_power_saving.print_table()
+        print()
+        bench_roofline.print_table("single")
+        print()
+        bench_roofline.print_table("multi")
+        print()
+        bench_tpu_duty_cycle.print_table()
+
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""repro: "Idle is the New Sleep" (Qian et al. 2024) as a multi-pod JAX
+framework — configuration-aware duty-cycle scheduling for DL accelerators.
+
+Subpackages: core (the paper), models, configs, kernels (Pallas TPU),
+distributed, optim, checkpoint, training, serving, launch, data.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,16 @@
+from repro.checkpoint.manager import AsyncCheckpointer, CheckpointManager
+from repro.checkpoint.serializer import (
+    MODES,
+    compression_stats,
+    deserialize,
+    serialize,
+)
+
+__all__ = [
+    "AsyncCheckpointer",
+    "CheckpointManager",
+    "MODES",
+    "compression_stats",
+    "deserialize",
+    "serialize",
+]

@@ -1,0 +1,38 @@
+"""Architecture configs — importing this package registers all archs."""
+from repro.configs.base import (
+    LM_SHAPES,
+    SHAPES_BY_NAME,
+    ArchConfig,
+    ShapeSpec,
+    all_cells,
+    arch_shapes,
+    get_config,
+    list_archs,
+)
+
+# registration side-effects (one module per assigned architecture)
+from repro.configs import (  # noqa: F401
+    hubert_xlarge,
+    internlm2_20b,
+    jamba_1_5_large_398b,
+    llava_next_mistral_7b,
+    mamba2_370m,
+    mixtral_8x7b,
+    paper_lstm,
+    qwen3_1_7b,
+    qwen3_32b,
+    qwen3_moe_235b_a22b,
+    yi_6b,
+)
+
+__all__ = [
+    "LM_SHAPES",
+    "SHAPES_BY_NAME",
+    "ArchConfig",
+    "ShapeSpec",
+    "all_cells",
+    "arch_shapes",
+    "get_config",
+    "list_archs",
+    "paper_lstm",
+]

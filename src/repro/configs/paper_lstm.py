@@ -1,0 +1,31 @@
+"""The paper's own DL accelerator: LSTM with hidden size 20 ([13], §5.2).
+
+Used by the faithful-reproduction layer (examples/quickstart.py, the
+duty-cycle serving demo, and kernels/lstm).  Not part of the assigned
+LM-architecture pool — it keeps the paper's own workload runnable
+end-to-end in the framework.
+"""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class LstmConfig:
+    name: str = "paper-lstm-h20"
+    input_dim: int = 6           # e.g. 6-axis IMU time-series window
+    hidden_size: int = 20        # paper [13]: LSTM accelerator hidden=20
+    seq_len: int = 64
+    num_classes: int = 5
+
+    # TPU kernel padding: lanes are 128-wide; the Pallas kernel pads
+    # hidden/feature dims up to the lane width (DESIGN.md §7).
+    @property
+    def padded_hidden(self) -> int:
+        return 128
+
+
+def full() -> LstmConfig:
+    return LstmConfig()
+
+
+def reduced() -> LstmConfig:
+    return LstmConfig(name="paper-lstm-h20-reduced", seq_len=16)

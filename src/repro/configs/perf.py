@@ -1,0 +1,38 @@
+"""Performance knobs — the levers the §Perf hillclimb iterates.
+
+Defaults are the paper-faithful / naive baseline; EXPERIMENTS.md §Perf
+records every change of these knobs with before/after roofline terms.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class PerfConfig:
+    # training
+    num_microbatches: int = 1          # grad-accum microbatches per step
+    remat: str = "full"                # full | dots | none
+    optimizer_moment_dtype: str = "float32"   # float32 | bfloat16
+    grad_compress_pod: bool = False    # int8 cross-pod gradient all-reduce
+
+    # sharding levers
+    seq_parallel_residual: bool = False  # store residuals seq-sharded on model
+    shard_long_cache_over_model: bool = False
+    gather_weights_once: bool = False  # lift FSDP gathers out of the
+                                       # microbatch loop (trades HBM for ICI)
+
+    # sharding levers (serving)
+    shard_cache_seq_over_model: bool = False   # flash-decode cache layout
+
+    # compute levers
+    loss_chunk: int = 4096             # vocab-projection sequence chunk
+    ssd_chunk: int = 128               # SSD chunk length
+    attention_impl: str = "auto"       # auto | xla | xla_flash | pallas
+    attn_scores_dtype: str = "float32"  # float32 | bfloat16 (xla_flash only)
+    attn_triangular: bool = False      # unroll q-chunks, skip masked K blocks
+    ssd_impl: str = "auto"
+    moe_capacity_factor: float | None = None   # override cfg.capacity_factor
+
+
+BASELINE = PerfConfig()

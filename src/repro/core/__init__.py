@@ -1,0 +1,71 @@
+"""Core library: the paper's contribution.
+
+- phases         : power/time phase model of a workload item (Table 2)
+- config_phase   : FPGA configuration-phase model + parameter sweep (Exp. 1)
+- energy_model   : analytical model, Eqs. 1-4 (§4.3)
+- strategies     : On-Off vs Idle-Waiting + power-saving methods (Exp. 2-3)
+- workload       : YAML workload/item descriptions (§5.1)
+- simulator      : discrete-event duty-cycle simulator (§5.1)
+- tpu_energy     : TPU-pod adaptation of the phase/energy model (DESIGN.md §3)
+- duty_cycle     : runnable duty-cycle controller for the serving engine
+"""
+from repro.core.phases import (
+    CONFIGURATION,
+    DATA_LOADING,
+    DATA_OFFLOADING,
+    EXECUTION_PHASES,
+    IDLE,
+    INFERENCE,
+    PAPER_IDLE_POWER_BASELINE_MW,
+    Phase,
+    WorkloadItem,
+    paper_lstm_item,
+)
+from repro.core.config_phase import (
+    BEST_PARAMS,
+    COMPRESSION_OPTIONS,
+    DEVICES,
+    SPARTAN7_XC7S15,
+    SPARTAN7_XC7S25,
+    SPI_BUSWIDTHS,
+    SPI_CLOCKS_MHZ,
+    WORST_PARAMS,
+    ConfigParams,
+    FpgaDevice,
+    energy_reduction_factor,
+    optimal_params,
+    sweep_config_space,
+    time_reduction_factor,
+)
+from repro.core.energy_model import (
+    CALIBRATED_POWERUP_OVERHEAD_MJ,
+    PAPER_ENERGY_BUDGET_MJ,
+    StrategyResult,
+    crossover_period_ms,
+    evaluate_idlewait,
+    evaluate_onoff,
+    idle_energy_mj,
+    idlewait_cumulative_energy_mj,
+    idlewait_n_max,
+    onoff_cumulative_energy_mj,
+    onoff_n_max,
+)
+from repro.core.strategies import (
+    FLASH_POWER_MW,
+    IDLE_POWER_MW,
+    IdlePowerMethod,
+    IdleWaitingStrategy,
+    OnOffStrategy,
+    Strategy,
+    compare_strategies,
+    idle_power_saving_pct,
+)
+from repro.core.workload import (
+    PAPER_WORKLOAD,
+    ExperimentSpec,
+    WorkloadSpec,
+    paper_experiment,
+)
+from repro.core.simulator import SimEvent, SimResult, simulate
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,253 @@
+"""Discrete-event duty-cycle simulator (paper §5.1).
+
+Replays a strategy event-by-event against an energy budget, accumulating
+per-phase energy, and reports the maximum number of executable workload
+items plus the estimated system lifetime.  It is the *mechanistic*
+counterpart to the closed-form analytical model
+(:mod:`repro.core.energy_model`); tests assert both agree exactly.
+
+Two execution modes:
+
+* ``step`` — strict event loop (one event per phase), O(n_items); used for
+  validation and for traces.
+* ``fast`` — exploits the affine structure of cumulative energy to jump
+  whole item-periods at once, O(1) per run; bit-identical n_max (used for
+  the paper-scale budgets where n_max is in the millions).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+from repro.core import energy_model as em
+from repro.core.phases import CONFIGURATION, IDLE, WorkloadItem
+from repro.core.strategies import IdleWaitingStrategy, OnOffStrategy, Strategy
+from repro.core.workload import ExperimentSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class SimEvent:
+    """One simulated phase occurrence."""
+
+    time_ms: float          # event start time
+    phase: str
+    power_mw: float
+    duration_ms: float
+
+    @property
+    def energy_mj(self) -> float:
+        return self.power_mw * self.duration_ms / 1000.0
+
+
+@dataclasses.dataclass
+class SimResult:
+    strategy: str
+    request_period_ms: float
+    n_items: int
+    lifetime_ms: float
+    energy_used_mj: float
+    energy_budget_mj: float
+    energy_by_phase_mj: dict
+
+    @property
+    def lifetime_hours(self) -> float:
+        return self.lifetime_ms / 3_600_000.0
+
+
+def _iter_events(
+    strategy: Strategy, request_period_ms: float, max_items: int | None = None
+) -> Iterator[SimEvent]:
+    """Generate the event stream for a strategy (unbounded unless max_items)."""
+    item = strategy.item
+    is_onoff = isinstance(strategy, OnOffStrategy)
+    t = 0.0
+    i = 0
+    # Idle-Waiting pays the one-time initial configuration (E_init).
+    if not is_onoff:
+        cfg = item.phase(CONFIGURATION) if item.has_phase(CONFIGURATION) else None
+        if cfg is not None:
+            yield SimEvent(t, "initial_" + CONFIGURATION, cfg.power_mw, cfg.time_ms)
+        if strategy.powerup_overhead_mj:
+            yield SimEvent(t, "initial_powerup", strategy.powerup_overhead_mj * 1000.0, 1.0)
+    while max_items is None or i < max_items:
+        start = t
+        if is_onoff:
+            if strategy.powerup_overhead_mj:
+                # Calibrated power-up ramp; expressed as 1 ms at E mW for bookkeeping.
+                yield SimEvent(t, "powerup", strategy.powerup_overhead_mj * 1000.0, 1.0)
+            for p in item.phases:
+                yield SimEvent(t, p.name, p.power_mw, p.time_ms)
+                t += p.time_ms
+            # off for the rest of the period: zero power, no event energy
+            t = start + request_period_ms
+        else:
+            for p in item.phases:
+                if p.name == CONFIGURATION:
+                    continue
+                yield SimEvent(t, p.name, p.power_mw, p.time_ms)
+                t += p.time_ms
+            idle_t = start + request_period_ms - t
+            assert isinstance(strategy, IdleWaitingStrategy)
+            yield SimEvent(t, IDLE, strategy.idle_power_mw, idle_t)
+            t = start + request_period_ms
+        i += 1
+
+
+def simulate(
+    spec: ExperimentSpec,
+    mode: str = "fast",
+    trace: bool = False,
+) -> SimResult | tuple[SimResult, list[SimEvent]]:
+    """Run the duty-cycle simulation for one experiment spec.
+
+    Counts how many *complete* workload items fit in the budget.  The idle
+    phase *between* item i and item i+1 is charged to item i+1's admission:
+    i.e. item n is executable iff E_init + n·E_item + (n−1)·E_idle ≤ budget —
+    matching Eq. 2/3.
+    """
+    strategy = spec.build_strategy()
+    budget = spec.workload.energy_budget_mj
+    t_req = spec.workload.request_period_ms
+
+    if t_req < strategy.min_request_period_ms():
+        res = SimResult(
+            strategy=strategy.name,
+            request_period_ms=t_req,
+            n_items=0,
+            lifetime_ms=0.0,
+            energy_used_mj=0.0,
+            energy_budget_mj=budget,
+            energy_by_phase_mj={},
+        )
+        return (res, []) if trace else res
+
+    if mode == "fast":
+        result = _simulate_fast(spec, strategy, budget, t_req)
+        return (result, []) if trace else result
+    if mode != "step":
+        raise ValueError(f"unknown mode {mode!r}")
+
+    # ---- strict event loop ------------------------------------------------
+    is_onoff = isinstance(strategy, OnOffStrategy)
+    item = strategy.item
+    e_item = (
+        em.onoff_item_energy_mj(item, strategy.powerup_overhead_mj)
+        if is_onoff
+        else em.idlewait_item_energy_mj(item)
+    )
+    e_idle = (
+        0.0
+        if is_onoff
+        else em.idle_energy_mj(item, t_req, strategy.idle_power_mw)  # type: ignore[attr-defined]
+    )
+
+    used = 0.0
+    by_phase: dict[str, float] = {}
+    events: list[SimEvent] = []
+    n = 0
+    e_init = 0.0
+    # Admission control: admit item n+1 only if its item energy plus the
+    # preceding idle gap fits the remaining budget.  The cumulative cost is
+    # recomputed by multiplication each step (affine form) so the event loop
+    # carries no accumulated floating-point drift over millions of items.
+    if not is_onoff:
+        e_init = em.idlewait_init_energy_mj(item, strategy.powerup_overhead_mj)
+        if e_init > budget:
+            res = SimResult(strategy.name, t_req, 0, 0.0, 0.0, budget, {})
+            return (res, events) if trace else res
+        used += e_init
+        by_phase["initial_configuration"] = e_init
+
+    gen = _iter_events(strategy, t_req)
+    if not is_onoff:
+        # skip the initial events already accounted for
+        ev = next(gen)
+        while ev.phase.startswith("initial_"):
+            if trace:
+                events.append(ev)
+            ev = next(gen)
+        pending: SimEvent | None = ev
+    else:
+        pending = None
+
+    per_period = e_item + e_idle
+    # events per admitted item: On-Off = (powerup?) + all phases;
+    # Idle-Waiting = execution phases, plus the preceding idle gap for n≥2.
+    if is_onoff:
+        events_per_item = len(item.phases) + (1 if strategy.powerup_overhead_mj else 0)
+    else:
+        events_per_item = sum(1 for p in item.phases if p.name != CONFIGURATION) + 1
+    while True:
+        next_n = n + 1
+        # cumulative cost after admitting item next_n (exact affine form,
+        # same epsilon convention as the closed-form n_max)
+        if is_onoff:
+            cum = next_n * e_item
+        else:
+            cum = e_init + next_n * e_item + (next_n - 1) * e_idle
+        if cum > budget + 1e-9 * per_period:
+            break
+        used = cum
+        n = next_n
+        # drain this item's events into the per-phase ledger.  The idle event
+        # trails each Idle-Waiting period; the (n)th item's admission charges
+        # the (n−1)th gap, so for item 1 we drain one fewer event and leave
+        # the trailing idle pending.
+        count = events_per_item if (is_onoff or n >= 2) else events_per_item - 1
+        for _ in range(count):
+            ev = pending if pending is not None else next(gen)
+            pending = None
+            by_phase[ev.phase] = by_phase.get(ev.phase, 0.0) + ev.energy_mj
+            if trace:
+                events.append(ev)
+
+    res = SimResult(
+        strategy=strategy.name,
+        request_period_ms=t_req,
+        n_items=n,
+        lifetime_ms=n * t_req,
+        energy_used_mj=used,
+        energy_budget_mj=budget,
+        energy_by_phase_mj=by_phase,
+    )
+    return (res, events) if trace else res
+
+
+def _simulate_fast(
+    spec: ExperimentSpec, strategy: Strategy, budget: float, t_req: float
+) -> SimResult:
+    """O(1) jump using the affine cumulative-energy structure (same n_max)."""
+    item = strategy.item
+    if isinstance(strategy, OnOffStrategy):
+        n = em.onoff_n_max(item, budget, strategy.powerup_overhead_mj)
+        used = em.onoff_cumulative_energy_mj(item, n, strategy.powerup_overhead_mj)
+        by_phase = {
+            p.name: n * p.energy_mj for p in item.phases
+        }
+        if strategy.powerup_overhead_mj:
+            by_phase["powerup"] = n * strategy.powerup_overhead_mj
+    else:
+        assert isinstance(strategy, IdleWaitingStrategy)
+        n = em.idlewait_n_max(
+            item, t_req, budget, strategy.idle_power_mw, strategy.powerup_overhead_mj
+        )
+        used = em.idlewait_cumulative_energy_mj(
+            item, n, t_req, strategy.idle_power_mw, strategy.powerup_overhead_mj
+        )
+        by_phase = {
+            p.name: n * p.energy_mj for p in item.phases if p.name != CONFIGURATION
+        }
+        by_phase["initial_configuration"] = em.idlewait_init_energy_mj(
+            item, strategy.powerup_overhead_mj
+        )
+        if n >= 1:
+            by_phase[IDLE] = (n - 1) * em.idle_energy_mj(item, t_req, strategy.idle_power_mw)
+    return SimResult(
+        strategy=strategy.name,
+        request_period_ms=t_req,
+        n_items=n,
+        lifetime_ms=n * t_req,
+        energy_used_mj=used,
+        energy_budget_mj=budget,
+        energy_by_phase_mj=by_phase,
+    )

@@ -1,0 +1,190 @@
+"""Logical-axis sharding system (MaxText-style rules, minimal core).
+
+Model code annotates parameters and activations with *logical* axis names
+("batch", "embed", "mlp", "expert", …).  A rule table maps logical axes to
+physical mesh axes; the same model code then runs on the single-pod
+(16×16 "data","model"), the multi-pod (2×16×16 "pod","data","model"), a
+1-device CPU mesh (all rules resolve to None), or any elastic re-mesh —
+only the rules change.
+
+Usage:
+    with use_sharding(mesh, rules):
+        y = constrain(x, ("batch", None, "tp"))   # activation constraint
+    pspec = logical_to_pspec(("embed", "mlp"), rules, mesh)  # param sharding
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Logical = Union[str, None]
+Rules = dict[str, Union[str, tuple, None]]
+
+# ---------------------------------------------------------------------------
+# Default rule table (DESIGN.md §6).
+#   - weights: 2D-sharded — "embed"-like dims over the FSDP axes
+#     (pod, data), "tp"-like dims (heads / d_ff / experts / vocab) over model
+#   - activations: batch over (pod, data); sequence replicated by default
+#     (the seq-parallel residual rule "seq_sp" is an opt-in perf lever)
+# ---------------------------------------------------------------------------
+DEFAULT_RULES: Rules = {
+    # activation axes
+    "batch": ("pod", "data"),
+    "act_seq": None,            # sequence dim of activations
+    "seq_sp": "model",          # sequence-parallel residual storage (opt-in)
+    "act_embed": None,
+    "act_heads": "model",
+    "act_kv": None,
+    "act_mlp": "model",
+    "act_vocab": "model",
+    "cache_batch": ("pod", "data"),
+    "cache_seq": None,
+    "long_cache_seq": "data",   # long-context: shard KV/conv cache over seq
+    # parameter axes
+    "embed": ("pod", "data"),   # FSDP dim of weight matrices
+    "heads": "model",
+    "kv": "model",
+    "mlp": "model",
+    "expert": "model",          # expert-parallel dim
+    "expert_in": ("pod", "data"),
+    "vocab": "model",
+    "ssm_inner": "model",
+    "ssm_state": None,
+    "conv": None,
+    "layers": None,             # stacked-scan leading axis
+    "norm": None,
+}
+
+
+@dataclasses.dataclass
+class _ShardCtx:
+    mesh: Optional[Mesh] = None
+    rules: Optional[Rules] = None
+
+
+_ctx = threading.local()
+
+
+def _get() -> _ShardCtx:
+    if not hasattr(_ctx, "v"):
+        _ctx.v = _ShardCtx()
+    return _ctx.v
+
+
+@contextlib.contextmanager
+def use_sharding(mesh: Optional[Mesh], rules: Optional[Rules] = None):
+    """Install mesh+rules for `constrain` calls inside model code."""
+    prev = _get().mesh, _get().rules
+    _get().mesh, _get().rules = mesh, rules if rules is not None else DEFAULT_RULES
+    try:
+        yield
+    finally:
+        _get().mesh, _get().rules = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _get().mesh
+
+
+def current_rules() -> Rules:
+    return _get().rules or DEFAULT_RULES
+
+
+def logical_to_pspec(
+    axes: Sequence[Logical],
+    rules: Optional[Rules] = None,
+    mesh: Optional[Mesh] = None,
+    shape: Optional[Sequence[int]] = None,
+) -> P:
+    """Map logical axes to a PartitionSpec.
+
+    Drops mesh axes that (a) are absent from the mesh, (b) do not divide the
+    corresponding dimension (when ``shape`` is given — e.g. hubert's
+    vocab=504 on a 16-wide model axis), or (c) were already consumed by an
+    earlier dimension (a PartitionSpec may use each mesh axis once — e.g. a
+    batch=1 long-context cache whose batch and sequence rules both resolve
+    to "data")."""
+    rules = rules if rules is not None else current_rules()
+    mesh = mesh if mesh is not None else current_mesh()
+    mesh_axes = set(mesh.axis_names) if mesh is not None else set()
+    used: set[str] = set()
+    out = []
+    for i, ax in enumerate(axes):
+        if ax is None:
+            out.append(None)
+            continue
+        phys = rules.get(ax, None)
+        if phys is None:
+            out.append(None)
+            continue
+        if isinstance(phys, str):
+            phys = (phys,)
+        dim = shape[i] if shape is not None else None
+        chosen: list[str] = []
+        prod = 1
+        for p in phys:
+            if p not in mesh_axes or p in used:
+                continue
+            size = mesh.shape[p]
+            if dim is not None and dim % (prod * size) != 0:
+                continue
+            chosen.append(p)
+            prod *= size
+        for p in chosen:
+            used.add(p)
+        if not chosen:
+            out.append(None)
+        elif len(chosen) == 1:
+            out.append(chosen[0])
+        else:
+            out.append(tuple(chosen))
+    # trim trailing Nones (canonical form)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def named_sharding(
+    axes: Sequence[Logical],
+    mesh: Optional[Mesh] = None,
+    shape: Optional[Sequence[int]] = None,
+) -> Optional[NamedSharding]:
+    mesh = mesh if mesh is not None else current_mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, logical_to_pspec(axes, mesh=mesh, shape=shape))
+
+
+def constrain(x: jax.Array, axes: Sequence[Logical]) -> jax.Array:
+    """with_sharding_constraint under the installed mesh; identity if none
+    (single-device tests)."""
+    ns = named_sharding(axes, shape=x.shape)
+    if ns is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, ns)
+
+
+def axis_size(logical: str, mesh: Optional[Mesh] = None) -> int:
+    """Product of mesh-axis sizes a logical axis maps onto (1 if unmapped)."""
+    mesh = mesh if mesh is not None else current_mesh()
+    if mesh is None:
+        return 1
+    phys = current_rules().get(logical)
+    if phys is None:
+        return 1
+    if isinstance(phys, str):
+        phys = (phys,)
+    n = 1
+    for p in phys:
+        if p in mesh.axis_names:
+            n *= mesh.shape[p]
+    return n
+
+
+def divisible(dim: int, logical: str, mesh: Optional[Mesh] = None) -> bool:
+    return dim % axis_size(logical, mesh) == 0

@@ -1,0 +1,7 @@
+# Pallas TPU kernels for the perf-critical compute layers, each with
+# kernel.py (pl.pallas_call + BlockSpec VMEM tiling), ops.py (dispatching
+# jit wrapper) and ref.py (pure-jnp oracle):
+#   flash_attention/  blocked online-softmax attention (GQA/causal/SWA)
+#   ssd/              Mamba-2 chunked state-space-duality scan
+#   lstm/             the paper's LSTM accelerator (fused gates, 128 lanes)
+#   dequant/          int8->bf16 weight decompression (bring-up path)

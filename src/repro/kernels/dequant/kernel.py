@@ -1,0 +1,51 @@
+"""Pallas TPU kernel: blocked int8 → bf16 dequantize (weight-load path).
+
+Bring-up ("configuration phase") reads int8 weights + scales from HBM and
+writes bf16 — the kernel tiles (Br × Bc) blocks through VMEM so the
+dequant runs at HBM streaming bandwidth; column groups of 128 share one
+fp32 scale (lane-aligned broadcast).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dequant_kernel(q_ref, s_ref, o_ref, *, group: int):
+    q = q_ref[...].astype(jnp.float32)            # (Br, Bc)
+    s = s_ref[...]                                # (Br, Bc/group)
+    br, bc = q.shape
+    s_full = jnp.repeat(s, group, axis=1)         # (Br, Bc)
+    o_ref[...] = (q * s_full).astype(o_ref.dtype)
+
+
+def dequantize_blocked(
+    q: jax.Array,          # int8 (R, C)
+    scales: jax.Array,     # fp32 (R, C/group)
+    *,
+    group: int = 128,
+    block_r: int = 256,
+    block_c: int = 512,
+    dtype=jnp.bfloat16,
+    interpret: bool = False,
+) -> jax.Array:
+    r, c = q.shape
+    br = min(block_r, r)
+    bc = min(block_c, c)
+    assert r % br == 0 and c % bc == 0 and bc % group == 0, (r, c, br, bc)
+
+    kernel = functools.partial(_dequant_kernel, group=group)
+    return pl.pallas_call(
+        kernel,
+        grid=(r // br, c // bc),
+        in_specs=[
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((br, bc // group), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, c), dtype),
+        interpret=interpret,
+    )(q, scales)

@@ -1,0 +1,31 @@
+"""Public dequant op with implementation dispatch."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.dequant.ref import (
+    dequantize_blocked_reference,
+    quantize_blocked,
+)
+
+
+def dequantize(
+    q: jax.Array, scales: jax.Array, *, group: int = 128, dtype=None, impl: str = "auto"
+) -> jax.Array:
+    import jax.numpy as jnp
+
+    dtype = dtype or jnp.bfloat16
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl in ("xla", "ref"):
+        return dequantize_blocked_reference(q, scales, group=group, dtype=dtype)
+    if impl in ("pallas", "pallas_interpret"):
+        from repro.kernels.dequant.kernel import dequantize_blocked
+
+        return dequantize_blocked(
+            q, scales, group=group, dtype=dtype, interpret=(impl == "pallas_interpret")
+        )
+    raise ValueError(f"unknown dequant impl {impl!r}")
+
+
+__all__ = ["dequantize", "quantize_blocked"]

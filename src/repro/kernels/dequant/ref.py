@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for blocked int8 quantize/dequantize.
+
+The checkpoint-compression analogue of the paper's bitstream compression
+(DESIGN.md §3): weights are stored int8 with per-(row, column-group)
+fp32 scales; dequantize-on-load trades extra compute for fewer bytes
+moved — the same trade-off the paper measures for compressed bitstreams.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_blocked(
+    w: jax.Array, group: int = 128
+) -> tuple[jax.Array, jax.Array]:
+    """w (R, C) → (q int8 (R, C), scales fp32 (R, C/group))."""
+    r, c = w.shape
+    assert c % group == 0, (c, group)
+    wf = w.astype(jnp.float32).reshape(r, c // group, group)
+    scale = jnp.maximum(jnp.max(jnp.abs(wf), axis=-1), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(wf / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q.reshape(r, c), scale
+
+
+def dequantize_blocked_reference(
+    q: jax.Array, scales: jax.Array, group: int = 128, dtype=jnp.bfloat16
+) -> jax.Array:
+    """(q int8 (R, C), scales (R, C/group)) → w dtype (R, C)."""
+    r, c = q.shape
+    wf = q.astype(jnp.float32).reshape(r, c // group, group) * scales[..., None]
+    return wf.reshape(r, c).astype(dtype)

@@ -1,0 +1,170 @@
+"""Pallas TPU flash attention (blocked online-softmax).
+
+TPU-native design (DESIGN.md §7):
+  * grid = (batch, q_heads, Sq/Bq, Sk/Bk); the k-block axis is the minor
+    (fastest) grid dim, so the fp32 accumulator scratch persists across the
+    k sweep for each (b, h, iq) — classic FlashAttention-2 scheduling.
+  * BlockSpecs stage (Bq, D) query and (Bk, D) key/value tiles in VMEM with
+    MXU-aligned tiles (Bq = Bk = 128, D padded to 128 lanes).
+  * GQA: the k/v index_map folds the query head onto its kv head
+    (h → h · KVH / H), so no repeated KV is ever materialized.
+  * causal / sliding-window masks are computed from absolute positions;
+    fp32 running max/denominator (m, l) in SMEM-like scratch rows.
+
+Validated against ``ref.attention_reference`` in interpret mode on CPU
+(tests/kernels/test_flash_attention.py); on TPU this kernel is the
+attention execution path (`impl="pallas"`).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref,         # blocks
+    acc_ref, m_ref, l_ref,              # scratch
+    *,
+    scale: float,
+    causal: bool,
+    window: int,
+    q_offset: int,
+    bq: int,
+    bk: int,
+    n_k: int,
+    sq_valid: int,
+    sk_valid: int,
+):
+    ik = pl.program_id(3)
+    iq = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                 # (Bq, D)
+    k = k_ref[0, 0].astype(jnp.float32)                 # (Bk, D)
+    v = v_ref[0, 0].astype(jnp.float32)                 # (Bk, D)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                           # (Bq, Bk)
+
+    qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + q_offset
+    kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = (kpos < sk_valid) & (
+        iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) < sq_valid
+    )
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                                 # (Bq, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                              # (Bq, Bk)
+    p = jnp.where(mask, p, 0.0)
+
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _finish():
+        l = l_ref[...]
+        o = acc_ref[...] / jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = o.astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,                 # (B, Sq, H, D)
+    k: jax.Array,                 # (B, Sk, KVH, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    kv_positions: jax.Array | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Blocked flash attention.  Ring-buffer caches (kv_positions) fall back
+    to the XLA reference — decode is a gather-bound op the MXU kernel does
+    not target."""
+    if kv_positions is not None:
+        from repro.kernels.flash_attention.ref import attention_reference
+
+        return attention_reference(
+            q, k, v, causal=causal, window=window, q_offset=q_offset,
+            kv_positions=kv_positions,
+        )
+
+    b, sq, h, d = q.shape
+    _, sk, kvh, _ = k.shape
+    assert h % kvh == 0
+    scale = d ** -0.5
+
+    bq = min(block_q, max(8, sq))
+    bk = min(block_k, max(8, sk))
+    sq_pad = math.ceil(sq / bq) * bq
+    sk_pad = math.ceil(sk / bk) * bk
+    d_pad = max(d, 128) if not interpret else d
+
+    qt = jnp.moveaxis(q, 2, 1)     # (B, H, Sq, D)
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+    qt = jnp.pad(qt, ((0, 0), (0, 0), (0, sq_pad - sq), (0, d_pad - d)))
+    kt = jnp.pad(kt, ((0, 0), (0, 0), (0, sk_pad - sk), (0, d_pad - d)))
+    vt = jnp.pad(vt, ((0, 0), (0, 0), (0, sk_pad - sk), (0, d_pad - d)))
+
+    n_q = sq_pad // bq
+    n_k = sk_pad // bk
+    group = h // kvh
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale, causal=causal, window=window, q_offset=q_offset,
+        bq=bq, bk=bk, n_k=n_k, sq_valid=sq, sk_valid=sk,
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d_pad), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec(
+                (1, 1, bk, d_pad), lambda ib, ih, iq, ik: (ib, ih // group, ik, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, bk, d_pad), lambda ib, ih, iq, ik: (ib, ih // group, ik, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, bq, d_pad), lambda ib, ih, iq, ik: (ib, ih, iq, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq_pad, d_pad), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d_pad), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+
+    out = out[:, :, :sq, :d]
+    return jnp.moveaxis(out, 1, 2)

@@ -1,0 +1,79 @@
+"""Public attention op with implementation dispatch.
+
+``impl='auto'`` selects the Pallas flash kernel on TPU and the XLA
+reference elsewhere (this CPU container, and the 512-fake-device dry-run,
+lower the XLA path; the Pallas kernel is validated in interpret mode).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.ref import (
+    attention_chunked,
+    attention_flashlike,
+    attention_reference,
+)
+
+#: query lengths above this use the q-chunked XLA path (bounded memory)
+Q_CHUNK_THRESHOLD = 8192
+Q_CHUNK = 2048
+
+
+def _backend() -> str:
+    return jax.default_backend()
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    kv_positions: jax.Array | None = None,
+    impl: str = "auto",
+    scores_dtype=None,
+    triangular: bool = False,
+) -> jax.Array:
+    """Multi-head attention (GQA aware). Shapes:
+    q (B,Sq,H,D), k/v (B,Sk,KVH,D) → (B,Sq,H,D)."""
+    import jax.numpy as jnp
+
+    if impl == "auto":
+        impl = "pallas" if _backend() == "tpu" else "xla"
+    if impl == "xla" and q.shape[1] > Q_CHUNK_THRESHOLD:
+        impl = "xla_chunked"
+    if impl == "xla_chunked":
+        return attention_chunked(
+            q, k, v, causal=causal, window=window, q_offset=q_offset,
+            kv_positions=kv_positions, q_chunk=Q_CHUNK,
+        )
+    if impl == "xla_flash":
+        return attention_flashlike(
+            q, k, v, causal=causal, window=window, q_offset=q_offset,
+            kv_positions=kv_positions, q_chunk=Q_CHUNK, k_chunk=Q_CHUNK,
+            scores_dtype=scores_dtype or jnp.float32, triangular=triangular,
+        )
+    if impl == "pallas":
+        from repro.kernels.flash_attention.kernel import flash_attention
+
+        return flash_attention(
+            q, k, v, causal=causal, window=window, q_offset=q_offset,
+            kv_positions=kv_positions,
+        )
+    if impl in ("xla", "ref"):
+        return attention_reference(
+            q, k, v, causal=causal, window=window, q_offset=q_offset,
+            kv_positions=kv_positions,
+        )
+    if impl == "pallas_interpret":
+        from repro.kernels.flash_attention.kernel import flash_attention
+
+        return flash_attention(
+            q, k, v, causal=causal, window=window, q_offset=q_offset,
+            kv_positions=kv_positions, interpret=True,
+        )
+    raise ValueError(f"unknown attention impl {impl!r}")

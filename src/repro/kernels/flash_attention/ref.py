@@ -1,0 +1,222 @@
+"""Pure-jnp oracle for (flash) attention: GQA + causal + sliding window.
+
+This is the reference the Pallas kernel is validated against, and also the
+XLA execution path used on non-TPU backends (the math is identical; XLA
+fuses it adequately on CPU, the Pallas kernel owns the TPU roofline).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def repeat_kv(k: jax.Array, num_heads: int) -> jax.Array:
+    """(B, S, KVH, D) → (B, S, H, D) by repeating each kv head H/KVH times."""
+    b, s, kvh, d = k.shape
+    if kvh == num_heads:
+        return k
+    reps = num_heads // kvh
+    return jnp.repeat(k, reps, axis=2)
+
+
+def _attend(
+    q: jax.Array,                 # (B, Sq, H, D)
+    k: jax.Array,                 # (B, Sk, H, D)   (kv heads pre-repeated)
+    v: jax.Array,
+    q_positions: jax.Array,       # (Sq,) absolute query positions
+    kv_positions: jax.Array,      # (Sk,) absolute key positions; -1 invalid
+    causal: bool,
+    window: int,
+    scale: float,
+) -> jax.Array:
+    logits = jnp.einsum(
+        "bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    mask = (kv_positions >= 0)[None, :]
+    if causal:
+        mask = mask & (kv_positions[None, :] <= q_positions[:, None])
+    if window:
+        mask = mask & (kv_positions[None, :] > q_positions[:, None] - window)
+    logits = jnp.where(mask[None, None, :, :], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    # fully-masked rows (padded queries) → zeros, not NaN
+    probs = jnp.where(jnp.any(mask, axis=-1)[None, None, :, None], probs, 0.0)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def attention_reference(
+    q: jax.Array,                 # (B, Sq, H, D)
+    k: jax.Array,                 # (B, Sk, KVH, D)
+    v: jax.Array,                 # (B, Sk, KVH, D)
+    *,
+    causal: bool = True,
+    window: int = 0,              # sliding window size; 0 = unbounded
+    q_offset: int = 0,            # absolute position of query 0
+    kv_positions: jax.Array | None = None,   # (Sk,) absolute key positions
+                                             #  (ring-buffer caches); -1 = invalid
+    scale: float | None = None,
+) -> jax.Array:
+    """Softmax attention in fp32 with optional causal/sliding-window mask.
+
+    Returns (B, Sq, H, D) in q.dtype.
+    """
+    b, sq, h, d = q.shape
+    _, sk, kvh, _ = k.shape
+    assert h % kvh == 0, (h, kvh)
+    scale = (d ** -0.5) if scale is None else scale
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(sk) if kv_positions is None else kv_positions
+    return _attend(
+        q, repeat_kv(k, h), repeat_kv(v, h), qpos, kpos, causal, window, scale
+    )
+
+
+NEG_BIG = -1e30
+
+
+def attention_flashlike(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    kv_positions: jax.Array | None = None,
+    scale: float | None = None,
+    q_chunk: int = 2048,
+    k_chunk: int = 2048,
+    scores_dtype=jnp.float32,
+    triangular: bool = False,
+) -> jax.Array:
+    """Online-softmax attention blocked in BOTH q and k on the XLA path
+    (flash-attention scheduling without Pallas) — the §Perf lever that moves
+    the memory roofline term on long-context prefill:
+
+    * score blocks are (q_chunk × k_chunk), optionally bf16;
+    * masking is a single ADDITIVE bias (one fused add; no where-selects —
+      exp(s − m) underflows to exact 0 for masked entries);
+    * ``triangular=True`` unrolls the q-chunks so each one only visits the
+      k prefix its causal mask allows (≈2× fewer blocks at long S).
+
+    Running max/denominator stay fp32 (≤1e-2 abs error at bf16 scores).
+    """
+    b, sq, h, d = q.shape
+    _, sk, kvh, _ = k.shape
+    scale = (d ** -0.5) if scale is None else scale
+    kf, vf = repeat_kv(k, h), repeat_kv(v, h)
+    kpos = jnp.arange(sk) if kv_positions is None else kv_positions
+
+    pad_q = (-sq) % q_chunk
+    pad_k = (-sk) % k_chunk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        kf = jnp.pad(kf, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        kpos = jnp.pad(kpos, (0, pad_k), constant_values=-1)
+    nq, nk = q.shape[1] // q_chunk, kf.shape[1] // k_chunk
+
+    qcs = q.reshape(b, nq, q_chunk, h, d)
+    kc = kf.reshape(b, nk, k_chunk, h, d)
+    vc = vf.reshape(b, nk, k_chunk, h, d)
+    kposc = kpos.reshape(nk, k_chunk)
+    qpos = (jnp.arange(nq * q_chunk) + q_offset).reshape(nq, q_chunk)
+
+    def mask_bias(qp, kp):
+        """(Qc, Kc) additive bias: 0 = attend, −1e30 = masked."""
+        ok = (kp >= 0)[None, :]
+        if causal:
+            ok = ok & (kp[None, :] <= qp[:, None])
+        if window:
+            ok = ok & (kp[None, :] > qp[:, None] - window)
+        return jnp.where(ok, 0.0, NEG_BIG).astype(jnp.float32)
+
+    def k_body(carry, kin, qs, qp):
+        m, l, acc = carry
+        ki, vi, kp = kin
+        s = jnp.einsum(
+            "bqhd,bkhd->bhqk", qs, ki.astype(scores_dtype)
+        ).astype(jnp.float32)
+        s = s + mask_bias(qp, kp)[None, None]        # single fused add
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        m_safe = jnp.maximum(m_new, NEG_BIG / 2)     # never −inf
+        p = jnp.exp(s - m_safe[..., None])           # masked → exp(−1e30)=0
+        alpha = jnp.exp(jnp.maximum(m, NEG_BIG / 2) - m_safe)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(scores_dtype), vi.astype(scores_dtype)
+        ).astype(jnp.float32)
+        return (m_new, l, acc), None
+
+    def run_chunk(qi, qp, k_blocks):
+        """One q chunk over its first ``k_blocks`` k blocks."""
+        qs = qi.astype(scores_dtype) * scale
+        m0 = jnp.full((b, h, q_chunk), NEG_BIG, jnp.float32)
+        l0 = jnp.zeros((b, h, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, h, q_chunk, d), jnp.float32)
+        xs = (
+            jnp.moveaxis(kc[:, :k_blocks], 1, 0),
+            jnp.moveaxis(vc[:, :k_blocks], 1, 0),
+            kposc[:k_blocks],
+        )
+        (m, l, acc), _ = jax.lax.scan(
+            lambda c, kin: k_body(c, kin, qs, qp), (m0, l0, a0), xs
+        )
+        out = acc / jnp.where(l == 0.0, 1.0, l)[..., None]
+        return jnp.moveaxis(out, 1, 2)               # (B, Qc, H, D)
+
+    if triangular and causal and kv_positions is None and q_offset == 0:
+        outs = []
+        for i in range(nq):
+            hi = min(nk, ((i + 1) * q_chunk + k_chunk - 1) // k_chunk)
+            outs.append(run_chunk(qcs[:, i], qpos[i], hi))
+        out = jnp.stack(outs, axis=1)
+    else:
+        _, out = jax.lax.scan(
+            lambda _, qin: (None, run_chunk(qin[0], qin[1], nk)),
+            None,
+            (jnp.moveaxis(qcs, 1, 0), qpos),
+        )
+        out = jnp.moveaxis(out, 0, 1)
+    out = out.reshape(b, nq * q_chunk, h, d)
+    return out[:, :sq].astype(q.dtype)
+
+
+def attention_chunked(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    kv_positions: jax.Array | None = None,
+    scale: float | None = None,
+    q_chunk: int = 2048,
+) -> jax.Array:
+    """Query-chunked exact attention: scans over Sq in blocks so the
+    (B, H, Sq, Sk) score tensor is never materialized — flash-attention
+    memory behaviour on the XLA path (long-context prefill)."""
+    b, sq, h, d = q.shape
+    _, sk, kvh, _ = k.shape
+    scale = (d ** -0.5) if scale is None else scale
+    kf, vf = repeat_kv(k, h), repeat_kv(v, h)
+    kpos = jnp.arange(sk) if kv_positions is None else kv_positions
+
+    pad = (-sq) % q_chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = q.shape[1] // q_chunk
+    qc = q.reshape(b, nc, q_chunk, h, d)
+    qpos = (jnp.arange(nc * q_chunk) + q_offset).reshape(nc, q_chunk)
+
+    def body(_, inp):
+        qi, pi = inp
+        out = _attend(qi, kf, vf, pi, kpos, causal, window, scale)
+        return None, out
+
+    _, out = jax.lax.scan(body, None, (jnp.moveaxis(qc, 1, 0), qpos))
+    out = jnp.moveaxis(out, 0, 1).reshape(b, nc * q_chunk, h, d)
+    return out[:, :sq]

@@ -1,0 +1,134 @@
+"""Pallas TPU kernel for the paper's LSTM accelerator (hidden=20 → 128 lanes).
+
+TPU adaptation of the paper's FPGA PE design ([13]): the FPGA implementation
+streams the 4 gate MACs through DSP slices; on TPU we fuse the 4 gate
+matmuls into one (I+H)×4H MXU matmul per step with hidden padded to the
+128-lane register width, and keep h/c in fp32 VMEM scratch across the
+sequential time grid.  One grid step = one timestep (the recurrence is
+inherently sequential; batch fills the MXU rows).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _lstm_kernel(
+    x_ref, wih_ref, whh_ref, b_ref, h0_ref, c0_ref,
+    hs_ref, hN_ref, cN_ref,
+    h_ref, c_ref,                       # scratch (B, Hp) fp32
+    *,
+    n_steps: int,
+    hp: int,
+):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        h_ref[...] = h0_ref[...].astype(jnp.float32)
+        c_ref[...] = c0_ref[...].astype(jnp.float32)
+
+    x = x_ref[...].astype(jnp.float32)            # (B, I)
+    h = h_ref[...]
+    c = c_ref[...]
+
+    gates = (
+        jax.lax.dot_general(
+            x, wih_ref[...].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        + jax.lax.dot_general(
+            h, whh_ref[...].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        + b_ref[...].astype(jnp.float32)
+    )                                             # (B, 4·Hp)
+    i = jax.nn.sigmoid(gates[:, 0 * hp : 1 * hp])
+    f = jax.nn.sigmoid(gates[:, 1 * hp : 2 * hp])
+    g = jnp.tanh(gates[:, 2 * hp : 3 * hp])
+    o = jax.nn.sigmoid(gates[:, 3 * hp : 4 * hp])
+
+    c_new = f * c + i * g
+    h_new = o * jnp.tanh(c_new)
+    c_ref[...] = c_new
+    h_ref[...] = h_new
+    hs_ref[...] = h_new.astype(hs_ref.dtype)
+
+    @pl.when(t == n_steps - 1)
+    def _finish():
+        hN_ref[...] = h_new.astype(hN_ref.dtype)
+        cN_ref[...] = c_new.astype(cN_ref.dtype)
+
+
+def lstm_pallas(
+    x: jax.Array,       # (B, S, I)
+    w_ih: jax.Array,    # (I, 4H)
+    w_hh: jax.Array,    # (H, 4H)
+    b: jax.Array,       # (4H,)
+    h0: jax.Array | None = None,
+    c0: jax.Array | None = None,
+    *,
+    lane: int = 128,
+    interpret: bool = False,
+):
+    bsz, s, i_dim = x.shape
+    h_dim = w_hh.shape[0]
+    hp = ((h_dim + lane - 1) // lane) * lane
+    ip = ((i_dim + lane - 1) // lane) * lane
+
+    # pad: per-gate columns so gate slicing stays aligned
+    def pad_gates(w, rows_to):
+        parts = jnp.split(w, 4, axis=1)
+        parts = [jnp.pad(p, ((0, rows_to - w.shape[0]), (0, hp - h_dim))) for p in parts]
+        return jnp.concatenate(parts, axis=1)
+
+    wih_p = pad_gates(w_ih, ip)
+    whh_p = pad_gates(w_hh, hp)
+    b_p = jnp.concatenate(
+        [jnp.pad(p, (0, hp - h_dim)) for p in jnp.split(b, 4)]
+    )[None, :]
+    xp = jnp.pad(x, ((0, 0), (0, 0), (0, ip - i_dim)))
+    xt = jnp.moveaxis(xp, 1, 0)                       # (S, B, Ip)
+
+    h0p = jnp.zeros((bsz, hp), x.dtype) if h0 is None else jnp.pad(
+        h0, ((0, 0), (0, hp - h_dim))
+    )
+    c0p = jnp.zeros((bsz, hp), x.dtype) if c0 is None else jnp.pad(
+        c0, ((0, 0), (0, hp - h_dim))
+    )
+
+    kernel = functools.partial(_lstm_kernel, n_steps=s, hp=hp)
+    hs, h_n, c_n = pl.pallas_call(
+        kernel,
+        grid=(s,),
+        in_specs=[
+            pl.BlockSpec((None, bsz, ip), lambda t: (t, 0, 0)),
+            pl.BlockSpec((ip, 4 * hp), lambda t: (0, 0)),
+            pl.BlockSpec((hp, 4 * hp), lambda t: (0, 0)),
+            pl.BlockSpec((1, 4 * hp), lambda t: (0, 0)),
+            pl.BlockSpec((bsz, hp), lambda t: (0, 0)),
+            pl.BlockSpec((bsz, hp), lambda t: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, bsz, hp), lambda t: (t, 0, 0)),
+            pl.BlockSpec((bsz, hp), lambda t: (0, 0)),
+            pl.BlockSpec((bsz, hp), lambda t: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((s, bsz, hp), x.dtype),
+            jax.ShapeDtypeStruct((bsz, hp), x.dtype),
+            jax.ShapeDtypeStruct((bsz, hp), x.dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bsz, hp), jnp.float32),
+            pltpu.VMEM((bsz, hp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xt, wih_p, whh_p, b_p, h0p, c0p)
+
+    hs = jnp.moveaxis(hs, 0, 1)[:, :, :h_dim]
+    return hs, (h_n[:, :h_dim], c_n[:, :h_dim])

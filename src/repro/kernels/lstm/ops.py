@@ -1,0 +1,30 @@
+"""Public LSTM op with implementation dispatch."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.lstm.ref import lstm_reference
+
+
+def lstm(
+    x: jax.Array,
+    w_ih: jax.Array,
+    w_hh: jax.Array,
+    b: jax.Array,
+    h0: jax.Array | None = None,
+    c0: jax.Array | None = None,
+    *,
+    impl: str = "auto",
+):
+    """(B,S,I) → (hs (B,S,H), (h,c))."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl in ("xla", "ref"):
+        return lstm_reference(x, w_ih, w_hh, b, h0, c0)
+    if impl in ("pallas", "pallas_interpret"):
+        from repro.kernels.lstm.kernel import lstm_pallas
+
+        return lstm_pallas(
+            x, w_ih, w_hh, b, h0, c0, interpret=(impl == "pallas_interpret")
+        )
+    raise ValueError(f"unknown lstm impl {impl!r}")

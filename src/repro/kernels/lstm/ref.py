@@ -1,0 +1,49 @@
+"""Pure-jnp oracle for the LSTM cell/sequence (the paper's accelerator [13]).
+
+Gate order: i, f, g, o  (input, forget, cell, output).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lstm_cell_reference(
+    x_t: jax.Array,     # (B, I)
+    h: jax.Array,       # (B, H)
+    c: jax.Array,       # (B, H)
+    w_ih: jax.Array,    # (I, 4H)
+    w_hh: jax.Array,    # (H, 4H)
+    b: jax.Array,       # (4H,)
+) -> tuple[jax.Array, jax.Array]:
+    hdim = h.shape[-1]
+    gates = x_t @ w_ih + h @ w_hh + b[None, :]
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    i, f, o = jax.nn.sigmoid(i), jax.nn.sigmoid(f), jax.nn.sigmoid(o)
+    g = jnp.tanh(g)
+    c_new = f * c + i * g
+    h_new = o * jnp.tanh(c_new)
+    return h_new, c_new
+
+
+def lstm_reference(
+    x: jax.Array,       # (B, S, I)
+    w_ih: jax.Array,
+    w_hh: jax.Array,
+    b: jax.Array,
+    h0: jax.Array | None = None,
+    c0: jax.Array | None = None,
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    """Full-sequence LSTM → (hs (B,S,H), (h_final, c_final))."""
+    bsz, s, _ = x.shape
+    hdim = w_hh.shape[0]
+    h = jnp.zeros((bsz, hdim), x.dtype) if h0 is None else h0
+    c = jnp.zeros((bsz, hdim), x.dtype) if c0 is None else c0
+
+    def step(carry, x_t):
+        h, c = carry
+        h, c = lstm_cell_reference(x_t, h, c, w_ih, w_hh, b)
+        return (h, c), h
+
+    (h, c), hs = jax.lax.scan(step, (h, c), jnp.moveaxis(x, 1, 0))
+    return jnp.moveaxis(hs, 0, 1), (h, c)

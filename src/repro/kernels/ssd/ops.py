@@ -1,0 +1,46 @@
+"""Public SSD op with implementation dispatch (mirror of flash_attention.ops)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ssd.ref import (
+    ssd_chunked,
+    ssd_decode_step,
+    ssd_recurrent_reference,
+)
+
+
+def ssd(
+    x: jax.Array,
+    dt: jax.Array,
+    a: jax.Array,
+    b_mat: jax.Array,
+    c_mat: jax.Array,
+    d_vec: jax.Array,
+    *,
+    chunk: int = 128,
+    init_state: jax.Array | None = None,
+    impl: str = "auto",
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked state-space-duality scan.  x (B,S,H,P) → (y, final_state)."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl == "pallas":
+        from repro.kernels.ssd.kernel import ssd_pallas
+
+        return ssd_pallas(x, dt, a, b_mat, c_mat, d_vec, chunk=chunk, init_state=init_state)
+    if impl == "pallas_interpret":
+        from repro.kernels.ssd.kernel import ssd_pallas
+
+        return ssd_pallas(
+            x, dt, a, b_mat, c_mat, d_vec, chunk=chunk, init_state=init_state,
+            interpret=True,
+        )
+    if impl == "xla":
+        return ssd_chunked(x, dt, a, b_mat, c_mat, d_vec, chunk=chunk, init_state=init_state)
+    if impl == "ref":
+        return ssd_recurrent_reference(x, dt, a, b_mat, c_mat, d_vec, init_state=init_state)
+    raise ValueError(f"unknown ssd impl {impl!r}")
+
+
+__all__ = ["ssd", "ssd_decode_step"]

@@ -1,0 +1,176 @@
+"""Mamba-2 SSD (state-space duality) references.
+
+Two implementations:
+
+* :func:`ssd_recurrent_reference` — the O(S) sequential recurrence; the
+  ground-truth oracle (slow, exact).
+* :func:`ssd_chunked` — the chunked/blocked SSD form (dense intra-chunk
+  matmuls + inter-chunk recurrence over S/Q steps).  This is the
+  MXU-friendly formulation the model's XLA path uses and the layout the
+  Pallas kernel implements.
+
+Semantics (per head h, state dim n, head dim p):
+
+    a_t = exp(A_h · dt_t)                (scalar decay, A_h < 0)
+    h_t = a_t · h_{t−1} + dt_t · B_t ⊗ x_t        (n × p state)
+    y_t = C_t · h_t + D_h · x_t
+
+B_t, C_t are shared across heads within a group (g groups, h heads,
+heads-per-group = h/g).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _expand_groups(bc: jax.Array, num_heads: int) -> jax.Array:
+    """(B, S, G, N) → (B, S, H, N)."""
+    b, s, g, n = bc.shape
+    if g == num_heads:
+        return bc
+    return jnp.repeat(bc, num_heads // g, axis=2)
+
+
+def ssd_recurrent_reference(
+    x: jax.Array,      # (B, S, H, P)
+    dt: jax.Array,     # (B, S, H)      (already softplus'd, > 0)
+    a: jax.Array,      # (H,)           negative decay rates
+    b_mat: jax.Array,  # (B, S, G, N)
+    c_mat: jax.Array,  # (B, S, G, N)
+    d_vec: jax.Array,  # (H,)
+    init_state: jax.Array | None = None,   # (B, H, P, N)
+) -> tuple[jax.Array, jax.Array]:
+    """Sequential oracle.  Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    bm = _expand_groups(b_mat, h).astype(jnp.float32)
+    cm = _expand_groups(c_mat, h).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+
+    h0 = (
+        jnp.zeros((bsz, h, p, n), jnp.float32)
+        if init_state is None
+        else init_state.astype(jnp.float32)
+    )
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp  # (B,H,P), (B,H), (B,H,N), (B,H,N)
+        decay = jnp.exp(af[None, :] * dtt)                     # (B,H)
+        upd = jnp.einsum("bhp,bhn->bhpn", xt * dtt[..., None], bt)
+        state = state * decay[..., None, None] + upd
+        yt = jnp.einsum("bhpn,bhn->bhp", state, ct)
+        return state, yt
+
+    xs = (
+        jnp.moveaxis(xf, 1, 0),
+        jnp.moveaxis(dtf, 1, 0),
+        jnp.moveaxis(bm, 1, 0),
+        jnp.moveaxis(cm, 1, 0),
+    )
+    final, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1) + xf * d_vec.astype(jnp.float32)[None, None, :, None]
+    return y.astype(x.dtype), final
+
+
+def ssd_decode_step(
+    x: jax.Array,      # (B, H, P)   one token
+    dt: jax.Array,     # (B, H)
+    a: jax.Array,      # (H,)
+    b_t: jax.Array,    # (B, G, N)
+    c_t: jax.Array,    # (B, G, N)
+    d_vec: jax.Array,  # (H,)
+    state: jax.Array,  # (B, H, P, N)
+) -> tuple[jax.Array, jax.Array]:
+    """O(1) single-token state update (serving decode path)."""
+    bsz, h, p = x.shape
+    bm = _expand_groups(b_t[:, None], h)[:, 0].astype(jnp.float32)
+    cm = _expand_groups(c_t[:, None], h)[:, 0].astype(jnp.float32)
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    decay = jnp.exp(a.astype(jnp.float32)[None, :] * dtf)
+    upd = jnp.einsum("bhp,bhn->bhpn", xf * dtf[..., None], bm)
+    new_state = state.astype(jnp.float32) * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, cm)
+    y = y + xf * d_vec.astype(jnp.float32)[None, :, None]
+    return y.astype(x.dtype), new_state
+
+
+def _segsum(log_a: jax.Array) -> jax.Array:
+    """Stable segment-sum: out[..., i, j] = Σ_{j<t≤i} log_a[..., t]
+    (−inf for j > i).  log_a: (..., Q) → (..., Q, Q)."""
+    q = log_a.shape[-1]
+    cs = jnp.cumsum(log_a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]          # Σ_{j<t≤i}
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,      # (B, S, H, P)
+    dt: jax.Array,     # (B, S, H)
+    a: jax.Array,      # (H,)
+    b_mat: jax.Array,  # (B, S, G, N)
+    c_mat: jax.Array,  # (B, S, G, N)
+    d_vec: jax.Array,  # (H,)
+    chunk: int = 128,
+    init_state: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD: dense (MXU-aligned) intra-chunk attention-like matmuls +
+    an inter-chunk recurrence of length S/chunk.  Matches the recurrent
+    oracle to fp32 tolerance.  Returns (y, final_state)."""
+    bsz, s, h, p = x.shape
+    assert s % chunk == 0, (s, chunk)
+    nc, q = s // chunk, chunk
+    n = b_mat.shape[-1]
+
+    bm = _expand_groups(b_mat, h).astype(jnp.float32)
+    cm = _expand_groups(c_mat, h).astype(jnp.float32)
+    xf = x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]  # dt-scaled x
+    la = a.astype(jnp.float32)[None, None, :] * dt.astype(jnp.float32)  # (B,S,H) log-decay
+
+    # chunked views: (B, NC, Q, ...)
+    xc = xf.reshape(bsz, nc, q, h, p)
+    bc = bm.reshape(bsz, nc, q, h, n)
+    cc = cm.reshape(bsz, nc, q, h, n)
+    lac = la.reshape(bsz, nc, q, h)
+
+    cs = jnp.cumsum(lac, axis=2)                     # (B,NC,Q,H) within-chunk
+    total = cs[:, :, -1:, :]                         # (B,NC,1,H)
+
+    # 1) intra-chunk (diagonal blocks): Y_ij = C_i·B_j · exp(cs_i − cs_j) · x_j
+    lmat = _segsum(jnp.moveaxis(lac, 3, 2))          # (B,NC,H,Q,Q)
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", cc, bc)
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", scores * jnp.exp(lmat), xc)
+
+    # 2) chunk summaries: state contributed by each chunk
+    decay_to_end = jnp.exp(total - cs)               # (B,NC,Q,H)
+    states = jnp.einsum("bcqhn,bcqh,bcqhp->bchpn", bc, decay_to_end, xc)
+
+    # 3) inter-chunk recurrence (length NC scan)
+    chunk_decay = jnp.exp(total[:, :, 0, :])         # (B,NC,H)
+    h0 = (
+        jnp.zeros((bsz, h, p, n), jnp.float32)
+        if init_state is None
+        else init_state.astype(jnp.float32)
+    )
+
+    def step(carry, inp):
+        st, dec = inp                                # (B,H,P,N), (B,H)
+        new = carry * dec[..., None, None] + st
+        return new, carry                            # emit state *entering* chunk
+
+    final, entering = jax.lax.scan(
+        step, h0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0))
+    )
+    entering = jnp.moveaxis(entering, 0, 1)          # (B,NC,H,P,N)
+
+    # 4) inter-chunk output: y_off_i = C_i · (exp(cs_i) · H_entering)
+    y_off = jnp.einsum(
+        "bcqhn,bchpn,bcqh->bcqhp", cc, entering, jnp.exp(cs)
+    )
+
+    y = (y_diag + y_off).reshape(bsz, s, h, p)
+    y = y + x.astype(jnp.float32) * d_vec.astype(jnp.float32)[None, None, :, None]
+    return y.astype(x.dtype), final

@@ -1,0 +1,68 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any other import: jax locks the device count on first init.
+"""Multi-pod dry-run entry point (deliverable e).
+
+Lowers + compiles every (architecture × input shape) cell for the
+single-pod 16×16 mesh and the 2×16×16 multi-pod mesh, printing
+``memory_analysis()`` / ``cost_analysis()`` and writing the roofline JSON
+cache consumed by benchmarks/bench_roofline.py and EXPERIMENTS.md.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all --mesh both --out results/dryrun.json
+"""
+import argparse
+import dataclasses
+import json
+import sys
+
+
+def main() -> int:
+    from repro.configs import LM_SHAPES, list_archs
+    from repro.configs.perf import BASELINE, PerfConfig
+    from repro.launch.dryrun_lib import lower_cell, run_cells
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true", help="run every (arch × shape) cell")
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--perf", default=None, help="JSON dict of PerfConfig overrides")
+    args = ap.parse_args()
+
+    perf = BASELINE
+    if args.perf:
+        perf = PerfConfig(**{**dataclasses.asdict(BASELINE), **json.loads(args.perf)})
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    if args.all:
+        import os as _os
+
+        _os.makedirs(_os.path.dirname(args.out) or ".", exist_ok=True)
+        cells = [
+            (a, s.name, m)
+            for m in meshes
+            for a in list_archs()
+            for s in LM_SHAPES
+        ]
+        results = run_cells(cells, args.out, perf=perf, tag=args.tag)
+        bad = [r for r in results if r.status == "error"]
+        print(f"\n{len(results)} cells: {len(bad)} errors")
+        return 1 if bad else 0
+
+    if not args.arch or not args.shape:
+        ap.error("--arch and --shape required unless --all")
+    rc = 0
+    for m in meshes:
+        res = lower_cell(args.arch, args.shape, multi_pod=m, perf=perf)
+        print(json.dumps(res.to_json(), indent=2))
+        rc |= res.status == "error"
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

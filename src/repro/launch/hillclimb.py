@@ -1,0 +1,174 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any other import (same rule as dryrun.py).
+"""§Perf hillclimb runner: lower chosen cells under perf-lever variants and
+record roofline terms per iteration to results/hillclimb.json.
+
+    python -m repro.launch.hillclimb --cell moe_prefill
+"""
+import argparse
+import dataclasses
+import json
+
+
+CELLS = {
+    # (arch, shape, [(tag, perf-overrides), ...])
+    "moe_prefill": (
+        "qwen3-moe-235b-a22b",
+        "prefill_32k",
+        [
+            ("base", {"num_microbatches": 8}),
+            ("flash_xla", {"num_microbatches": 8, "attention_impl": "xla_flash"}),
+            (
+                "flash_bf16",
+                {
+                    "num_microbatches": 8,
+                    "attention_impl": "xla_flash",
+                    "attn_scores_dtype": "bfloat16",
+                },
+            ),
+            (
+                "flash_bf16_tri",
+                {
+                    "num_microbatches": 8,
+                    "attention_impl": "xla_flash",
+                    "attn_scores_dtype": "bfloat16",
+                    "attn_triangular": True,
+                },
+            ),
+            (
+                "flash_bf16_tri_cap1",
+                {
+                    "num_microbatches": 8,
+                    "attention_impl": "xla_flash",
+                    "attn_scores_dtype": "bfloat16",
+                    "attn_triangular": True,
+                    "moe_capacity_factor": 1.0,
+                },
+            ),
+            # round 2: the A5 cache-constraint win (context-parallel attn)
+            ("cache_tp", {"num_microbatches": 8, "shard_cache_seq_over_model": True}),
+            (
+                "cache_tp_flash",
+                {
+                    "num_microbatches": 8,
+                    "shard_cache_seq_over_model": True,
+                    "attention_impl": "xla_flash",
+                },
+            ),
+        ],
+    ),
+    "jamba_train": (
+        "jamba-1.5-large-398b",
+        "train_4k",
+        [
+            ("base", {"num_microbatches": 8}),
+            ("mb4", {"num_microbatches": 4}),
+            ("mb2", {"num_microbatches": 2}),
+            ("mb8_sp", {"num_microbatches": 8, "seq_parallel_residual": True}),
+            (
+                "mb2_sp",
+                {"num_microbatches": 2, "seq_parallel_residual": True},
+            ),
+            (
+                "mb2_sp_flashbf16",
+                {
+                    "num_microbatches": 2,
+                    "seq_parallel_residual": True,
+                    "attention_impl": "xla_flash",
+                    "attn_scores_dtype": "bfloat16",
+                    "attn_triangular": True,
+                },
+            ),
+            # round 2 (informed by round-1 measurements)
+            ("mb8_dots", {"num_microbatches": 8, "remat": "dots"}),
+            ("mb8_noremat", {"num_microbatches": 8, "remat": "none"}),
+            (
+                "mb8_mom16",
+                {"num_microbatches": 8, "optimizer_moment_dtype": "bfloat16"},
+            ),
+            (
+                "mb4_sp_mom16_flash",
+                {
+                    "num_microbatches": 4,
+                    "seq_parallel_residual": True,
+                    "optimizer_moment_dtype": "bfloat16",
+                    "attention_impl": "xla_flash",
+                    "attn_scores_dtype": "bfloat16",
+                    "attn_triangular": True,
+                },
+            ),
+        ],
+    ),
+    "mixtral_train": (
+        "mixtral-8x7b",
+        "train_4k",
+        [
+            ("base", {"num_microbatches": 8}),
+            ("gather_once", {"num_microbatches": 8, "gather_weights_once": True}),
+            (
+                "gather_once_mom16",
+                {
+                    "num_microbatches": 8,
+                    "gather_weights_once": True,
+                    "optimizer_moment_dtype": "bfloat16",
+                },
+            ),
+        ],
+    ),
+    "moe_decode": (
+        "qwen3-moe-235b-a22b",
+        "decode_32k",
+        [
+            ("base", {}),
+            ("cache_tp", {"shard_cache_seq_over_model": True}),
+            (
+                "cache_tp_cap1",
+                {"shard_cache_seq_over_model": True, "moe_capacity_factor": 1.0},
+            ),
+        ],
+    ),
+}
+
+
+def main() -> None:
+    from repro.configs.perf import BASELINE, PerfConfig
+    from repro.launch.dryrun_lib import lower_cell
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", choices=sorted(CELLS) + ["all"], default="all")
+    ap.add_argument("--out", default="results/hillclimb.json")
+    args = ap.parse_args()
+
+    names = sorted(CELLS) if args.cell == "all" else [args.cell]
+    results = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    for name in names:
+        arch, shape, variants = CELLS[name]
+        for tag, overrides in variants:
+            key = f"{name}|{tag}"
+            if key in results and results[key].get("status") == "ok":
+                continue
+            perf = PerfConfig(**{**dataclasses.asdict(BASELINE), **overrides})
+            res = lower_cell(arch, shape, multi_pod=False, perf=perf)
+            rec = res.to_json()
+            rec["overrides"] = overrides
+            results[key] = rec
+            os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+            r = rec.get("roofline") or {}
+            print(
+                f"[{rec['status']:7s}] {key}: "
+                f"comp={r.get('compute_s', 0):.2f}s mem={r.get('memory_s', 0):.2f}s "
+                f"coll={r.get('collective_s', 0):.2f}s "
+                f"hbm={(rec.get('memory') or {}).get('per_device_total_gb', 0):.1f}GB "
+                f"{rec.get('reason','')[:80]}",
+                flush=True,
+            )
+
+
+if __name__ == "__main__":
+    main()

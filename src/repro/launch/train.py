@@ -1,0 +1,134 @@
+"""Training driver: data pipeline → train loop → checkpoints → metrics.
+
+Runs reduced configs end-to-end on this CPU container (examples/train_lm.py)
+and, unchanged, full configs under the production mesh on a real pod (the
+mesh/shardings come from the same rule table the dry-run validated).
+
+    python -m repro.launch.train --arch qwen3-1.7b --reduced \
+        --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import AsyncCheckpointer, CheckpointManager
+from repro.configs import get_config
+from repro.configs.perf import BASELINE, PerfConfig
+from repro.data.pipeline import SyntheticLMStream, batch_for_arch, shard_batch
+from repro.distributed import sharding as shd
+from repro.distributed.fault_tolerance import StragglerDetector
+from repro.launch.mesh import make_host_mesh
+from repro.models import model_zoo as zoo
+from repro.optim import cosine_with_warmup
+from repro.training.train_loop import TrainState, make_train_step
+
+
+def train(
+    arch: str,
+    reduced: bool = True,
+    steps: int = 100,
+    batch: int = 8,
+    seq: int = 128,
+    lr: float = 3e-4,
+    warmup: int = 20,
+    ckpt_dir: str | None = None,
+    ckpt_every: int = 50,
+    num_microbatches: int = 1,
+    seed: int = 0,
+    mesh=None,
+    log_every: int = 10,
+    resume: bool = True,
+) -> dict:
+    cfg = get_config(arch, reduced=reduced)
+    perf = PerfConfig(num_microbatches=num_microbatches)
+    mesh = mesh if mesh is not None else make_host_mesh()
+
+    stream = SyntheticLMStream(
+        vocab_size=max(cfg.vocab_size, 2), global_batch=batch, seq_len=seq, seed=seed
+    )
+
+    with shd.use_sharding(mesh):
+        fns = make_train_step(cfg, perf, mesh=mesh)
+        params = zoo.init_params(cfg, jax.random.PRNGKey(seed))
+        state = fns.init_state(params)
+        start_step = 0
+
+        manager = ckpt = None
+        if ckpt_dir:
+            manager = CheckpointManager(ckpt_dir, keep=3)
+            ckpt = AsyncCheckpointer(manager)
+            if resume:
+                latest, restored = manager.restore_latest(
+                    jax.eval_shape(lambda s: s, state)
+                )
+                if restored is not None:
+                    state = jax.tree.map(jnp.asarray, restored)
+                    start_step = latest
+                    stream.restore({"step": latest, "seed": seed})
+                    print(f"resumed from step {latest}")
+
+        step_fn = jax.jit(fns.train_step, donate_argnums=(0,))
+        detector = StragglerDetector()
+        losses = []
+        for step in range(start_step, steps):
+            raw = batch_for_arch(cfg, stream.next_batch())
+            b = shard_batch(raw, mesh)
+            lr_t = cosine_with_warmup(step, lr, warmup, steps)
+            t0 = time.perf_counter()
+            state, metrics = step_fn(state, b, lr_t)
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            detector.record("host0", dt)
+            losses.append(loss)
+            if step % log_every == 0 or step == steps - 1:
+                print(
+                    f"step {step:5d}  loss {loss:.4f}  gnorm "
+                    f"{float(metrics['grad_norm']):.3f}  {dt*1000:.0f} ms"
+                )
+            if ckpt and (step + 1) % ckpt_every == 0:
+                ckpt.save(step + 1, state)
+        if ckpt:
+            ckpt.save(steps, state)
+            ckpt.wait()
+    return {
+        "final_loss": losses[-1] if losses else float("nan"),
+        "first_loss": losses[0] if losses else float("nan"),
+        "losses": losses,
+        "state": state,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args()
+    out = train(
+        args.arch,
+        reduced=args.reduced,
+        steps=args.steps,
+        batch=args.batch,
+        seq=args.seq,
+        lr=args.lr,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every,
+        num_microbatches=args.microbatches,
+    )
+    print(f"loss {out['first_loss']:.4f} → {out['final_loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,182 @@
+"""GQA attention block: qk_norm, RoPE, sliding window, KV cache.
+
+Cache layout (serving): ``KVCache(k, v, positions, index)`` where ``k``/``v``
+are (B, C, KVH, D) ring/linear buffers, ``positions`` (C,) holds each slot's
+absolute position (−1 = uninitialized; required for ring buffers under SWA
+and for RoPE-consistent masking), and ``index`` is the next absolute
+position (scalar int32).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import constrain
+from repro.kernels.flash_attention import ops as attn_ops
+from repro.models.common import Spec, apply_rope, rms_norm, rope_angles
+
+
+class KVCache(NamedTuple):
+    k: jax.Array           # (B, C, KVH, D)
+    v: jax.Array           # (B, C, KVH, D)
+    positions: jax.Array   # (C,) int32, absolute positions; -1 invalid
+    index: jax.Array       # () int32, next absolute position
+
+
+def attention_specs(cfg: ArchConfig) -> dict:
+    d, q, kv, hd = cfg.d_model, cfg.q_dim, cfg.kv_dim, cfg.head_dim
+    specs = {
+        "wq": Spec((d, q), ("embed", "heads")),
+        "wk": Spec((d, kv), ("embed", "kv")),
+        "wv": Spec((d, kv), ("embed", "kv")),
+        "wo": Spec((q, d), ("heads", "embed")),
+    }
+    if cfg.qk_norm:
+        specs["q_norm"] = Spec((hd,), ("norm",), init="ones")
+        specs["k_norm"] = Spec((hd,), ("norm",), init="ones")
+    return specs
+
+
+def init_cache(
+    cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16
+) -> KVCache:
+    """Empty cache.  Under SWA the buffer is bounded by the window."""
+    c = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    return KVCache(
+        k=jnp.zeros((batch, c, cfg.num_kv_heads, cfg.head_dim), dtype),
+        v=jnp.zeros((batch, c, cfg.num_kv_heads, cfg.head_dim), dtype),
+        positions=jnp.full((c,), -1, jnp.int32),
+        index=jnp.zeros((), jnp.int32),
+    )
+
+
+def _project_qkv(params, x, cfg: ArchConfig, positions):
+    b, s, _ = x.shape
+    q = (x @ params["wq"]).reshape(b, s, cfg.num_heads, cfg.head_dim)
+    k = (x @ params["wk"]).reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    v = (x @ params["wv"]).reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    cos, sin = rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def attention_block(
+    params: dict,
+    x: jax.Array,                       # (B, S, d)
+    cfg: ArchConfig,
+    *,
+    q_offset: int = 0,
+    impl: str = "auto",
+    scores_dtype=None,
+    triangular: bool = False,
+) -> jax.Array:
+    """Full-sequence attention (train / prefill). Returns (B, S, d)."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s) + q_offset
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    q = constrain(q, ("batch", "act_seq", "act_heads", None))
+    k = constrain(k, ("batch", "act_seq", "act_kv", None))
+    v = constrain(v, ("batch", "act_seq", "act_kv", None))
+    y = attn_ops.attention(
+        q, k, v,
+        causal=cfg.causal,
+        window=cfg.sliding_window,
+        q_offset=q_offset,
+        impl=impl,
+        scores_dtype=scores_dtype,
+        triangular=triangular,
+    )
+    y = constrain(y, ("batch", "act_seq", "act_heads", None))
+    return y.reshape(b, s, cfg.q_dim) @ params["wo"]
+
+
+def attention_decode(
+    params: dict,
+    x: jax.Array,                       # (B, 1, d)
+    cache: KVCache,
+    cfg: ArchConfig,
+    *,
+    long_context: bool = False,
+) -> tuple[jax.Array, KVCache]:
+    """One-token decode against the KV cache. Returns ((B,1,d), new cache)."""
+    b, s, _ = x.shape
+    assert s == 1
+    pos = cache.index[None]                         # (1,) absolute position
+    q, k_new, v_new = _project_qkv(params, x, cfg, pos)
+
+    c = cache.k.shape[1]
+    slot = (
+        jnp.mod(cache.index, c) if cfg.sliding_window else jnp.minimum(cache.index, c - 1)
+    )
+    k_buf = jax.lax.dynamic_update_slice(cache.k, k_new, (0, slot, 0, 0))
+    v_buf = jax.lax.dynamic_update_slice(cache.v, v_new, (0, slot, 0, 0))
+    positions = jax.lax.dynamic_update_slice(cache.positions, pos, (slot,))
+
+    seq_axis = "long_cache_seq" if long_context else "cache_seq"
+    k_buf = constrain(k_buf, ("cache_batch", seq_axis, None, None))
+    v_buf = constrain(v_buf, ("cache_batch", seq_axis, None, None))
+
+    y = attn_ops.attention(
+        q, k_buf, v_buf,
+        causal=cfg.causal,
+        window=cfg.sliding_window,
+        q_offset=cache.index,
+        kv_positions=positions,
+        impl="xla",   # decode is memory-bound gather/softmax; XLA path
+    )
+    y = y.reshape(b, 1, cfg.q_dim) @ params["wo"]
+    return y, KVCache(k_buf, v_buf, positions, cache.index + 1)
+
+
+def prefill_cache(
+    params: dict,
+    x: jax.Array,                       # (B, S, d)
+    cfg: ArchConfig,
+    max_len: int,
+    *,
+    long_context: bool = False,
+    impl: str = "auto",
+    scores_dtype=None,
+    triangular: bool = False,
+) -> tuple[jax.Array, KVCache]:
+    """Full-sequence attention that also materializes the cache for
+    subsequent decode.  Returns ((B,S,d), cache)."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    y = attn_ops.attention(
+        q, k, v, causal=cfg.causal, window=cfg.sliding_window, impl=impl,
+        scores_dtype=scores_dtype, triangular=triangular,
+    )
+    y = y.reshape(b, s, cfg.q_dim) @ params["wo"]
+
+    cache = init_cache(cfg, b, max_len, dtype=x.dtype)
+    c = cache.k.shape[1]
+    if cfg.sliding_window and s > c:
+        # keep the last `window` keys, ring-aligned so slot = pos % window
+        last = jnp.arange(s - c, s)
+        ring = jnp.mod(last, c)
+        order = jnp.argsort(ring)
+        sel = last[order]
+        k_buf = jnp.take(k, sel, axis=1)
+        v_buf = jnp.take(v, sel, axis=1)
+        positions_buf = sel.astype(jnp.int32)
+    else:
+        k_buf = jax.lax.dynamic_update_slice(cache.k, k, (0, 0, 0, 0))
+        v_buf = jax.lax.dynamic_update_slice(cache.v, v, (0, 0, 0, 0))
+        positions_buf = jax.lax.dynamic_update_slice(
+            cache.positions, positions.astype(jnp.int32), (0,)
+        )
+        if not cfg.sliding_window:
+            seq_axis = "long_cache_seq" if long_context else "cache_seq"
+            k_buf = constrain(k_buf, ("cache_batch", seq_axis, None, None))
+            v_buf = constrain(v_buf, ("cache_batch", seq_axis, None, None))
+    return y, KVCache(k_buf, v_buf, positions_buf, jnp.asarray(s, jnp.int32))

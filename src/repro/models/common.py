@@ -1,0 +1,140 @@
+"""Shared model building blocks: parameter specs, RMSNorm, RoPE, embeddings.
+
+Parameters are declared once as :class:`Spec` trees (shape + logical axes +
+init), from which we derive — with a single source of truth —
+  * initialized arrays          (:func:`init_from_specs`)
+  * ShapeDtypeStructs           (:func:`shapes_from_specs`, dry-run)
+  * PartitionSpecs              (:func:`pspecs_from_specs`, pjit shardings)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed import sharding as shd
+
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    """Declaration of one parameter tensor."""
+
+    shape: tuple[int, ...]
+    axes: tuple                      # logical axis names, len == ndim
+    init: str = "normal"             # normal | zeros | ones
+    scale: float | None = None       # init stddev; default 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _leaf_init(spec: Spec, key: jax.Array, dtype) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+    std = spec.scale if spec.scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(dtype)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, Spec)
+
+
+def init_from_specs(specs: Any, key: jax.Array, dtype=jnp.bfloat16) -> Any:
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(
+        treedef, [_leaf_init(s, k, dtype) for s, k in zip(leaves, keys)]
+    )
+
+
+def shapes_from_specs(specs: Any, dtype=jnp.bfloat16) -> Any:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype), specs, is_leaf=is_spec
+    )
+
+
+def pspecs_from_specs(specs: Any, mesh=None) -> Any:
+    return jax.tree.map(
+        lambda s: shd.logical_to_pspec(s.axes, mesh=mesh, shape=s.shape),
+        specs,
+        is_leaf=is_spec,
+    )
+
+
+def count_params(specs: Any) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=is_spec)
+    return sum(int(np.prod(s.shape)) for s in leaves)
+
+
+def stack_specs(specs: Any, n: int, axis_name="layers") -> Any:
+    """Add a leading stacked-layer axis to every spec (for lax.scan)."""
+    return jax.tree.map(
+        lambda s: Spec((n,) + s.shape, (axis_name,) + s.axes, s.init, s.scale),
+        specs,
+        is_leaf=is_spec,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Numerics
+# ---------------------------------------------------------------------------
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm in fp32, cast back to input dtype."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    """cos/sin tables for RoPE at given integer positions (fp32)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (..., S, H, D); cos/sin: (S, D/2) or broadcastable (..., S, D/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    # broadcast cos/sin over the heads axis
+    c = cos[..., :, None, :]
+    s = sin[..., :, None, :]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * c - xf2 * s, xf2 * c + xf1 * s], axis=-1
+    ).astype(x.dtype)
+
+
+def cross_entropy_loss(
+    logits: jax.Array, labels: jax.Array, ignore_id: int = -1
+) -> jax.Array:
+    """Mean CE over non-ignored positions; logits fp32-stabilized.
+
+    logits: (..., V); labels: (...) int32.
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None].clip(0), axis=-1)[..., 0]
+    nll = lse - ll
+    mask = (labels != ignore_id).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def causal_mask(sq: int, sk: int, q_offset: int = 0, window: int = 0) -> jax.Array:
+    """(sq, sk) boolean mask; True = attend.  ``q_offset`` is the absolute
+    position of query 0 (for decode).  window>0 ⇒ sliding-window causal."""
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(sk)[None, :]
+    m = kpos <= qpos
+    if window:
+        m &= kpos > qpos - window
+    return m

@@ -1,0 +1,354 @@
+"""Decoder-LM assembly: specs → forward → loss / prefill / decode.
+
+All deep stacks run as ``lax.scan`` over *periods* (a period is
+``cfg.attn_every`` layers for hybrids, else 1 layer), with per-period
+parameters stacked on a leading axis.  This keeps the lowered HLO small
+(critical for 512-device CPU dry-run compiles) and makes the roofline
+collective parser multiply while-body collectives by the trip count.
+
+The same module serves the encoder-only family (hubert): ``causal=False``
+and no decode entry points.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.configs.perf import PerfConfig, BASELINE
+from repro.distributed.sharding import constrain
+from repro.models import attention as attn
+from repro.models import mamba2 as m2
+from repro.models import mlp as mlp_mod
+from repro.models import moe as moe_mod
+from repro.models.common import (
+    Spec,
+    cross_entropy_loss,
+    rms_norm,
+    stack_specs,
+)
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+def _block_specs(cfg: ArchConfig, pos: int) -> dict:
+    """One transformer block at position ``pos`` within a period."""
+    kind = cfg.layer_kind(pos)
+    specs: dict[str, Any] = {"ln1": Spec((cfg.d_model,), ("norm",), init="ones")}
+    if kind == "attn":
+        specs["attn"] = attn.attention_specs(cfg)
+    else:
+        specs["ssm"] = m2.mamba2_specs(cfg)
+    if cfg.d_ff:
+        specs["ln2"] = Spec((cfg.d_model,), ("norm",), init="ones")
+        if cfg.layer_is_moe(pos):
+            specs["moe"] = moe_mod.moe_specs(cfg)
+        else:
+            specs["mlp"] = mlp_mod.mlp_specs(cfg)
+    return specs
+
+
+def period_len(cfg: ArchConfig) -> int:
+    return cfg.attn_every if cfg.attn_every else 1
+
+
+def num_periods(cfg: ArchConfig) -> int:
+    return cfg.num_layers // period_len(cfg)
+
+
+def decoder_specs(cfg: ArchConfig) -> dict:
+    p = period_len(cfg)
+    period = {f"pos{i}": _block_specs(cfg, i) for i in range(p)}
+    specs: dict[str, Any] = {
+        "periods": stack_specs(period, num_periods(cfg)),
+        "final_norm": Spec((cfg.d_model,), ("norm",), init="ones"),
+    }
+    if cfg.frontend != "none":
+        specs["frontend_proj"] = Spec(
+            (cfg.frontend_dim, cfg.d_model), (None, "embed")
+        )
+    if cfg.vocab_size:
+        if cfg.frontend == "audio":
+            pass  # no token embedding: inputs are frames
+        else:
+            specs["embed"] = Spec(
+                (cfg.vocab_size, cfg.d_model), ("vocab", "embed"), scale=0.02
+            )
+        if not cfg.tie_embeddings or cfg.frontend == "audio":
+            specs["lm_head"] = Spec(
+                (cfg.d_model, cfg.vocab_size), ("embed", "vocab")
+            )
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Input embedding (modality adapters)
+# ---------------------------------------------------------------------------
+def embed_inputs(params: dict, batch: dict, cfg: ArchConfig) -> jax.Array:
+    """batch → (B, S, d) residual stream input.
+
+    vlm  : {'tokens': (B, S−N), 'patch_embeds': (B, N, frontend_dim)}
+    audio: {'features': (B, S, frontend_dim)}
+    else : {'tokens': (B, S)}
+    """
+    if cfg.frontend == "audio":
+        x = batch["features"].astype(jnp.bfloat16) @ params["frontend_proj"]
+    elif cfg.frontend == "vision":
+        img = batch["patch_embeds"].astype(jnp.bfloat16) @ params["frontend_proj"]
+        tok = jnp.take(params["embed"], batch["tokens"], axis=0)
+        x = jnp.concatenate([img, tok], axis=1)
+    else:
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    return constrain(x, ("batch", "act_seq", None))
+
+
+# ---------------------------------------------------------------------------
+# Forward (full sequence)
+# ---------------------------------------------------------------------------
+def _apply_block(
+    bp: dict, x: jax.Array, cfg: ArchConfig, pos: int, perf: PerfConfig
+) -> tuple[jax.Array, jax.Array]:
+    """x → (x, aux)."""
+    kind = cfg.layer_kind(pos)
+    h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+    if kind == "attn":
+        mix = attn.attention_block(
+            bp["attn"], h, cfg, impl=perf.attention_impl,
+            scores_dtype=jnp.bfloat16 if perf.attn_scores_dtype == "bfloat16" else None,
+            triangular=perf.attn_triangular,
+        )
+    else:
+        mix = m2.mamba2_block(
+            bp["ssm"], h, cfg, impl=perf.ssd_impl, chunk=perf.ssd_chunk
+        )
+    x = x + mix
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.d_ff:
+        h = rms_norm(x, bp["ln2"], cfg.norm_eps)
+        if cfg.layer_is_moe(pos):
+            f, aux = moe_mod.moe_block(bp["moe"], h, cfg, perf.moe_capacity_factor)
+        else:
+            f = mlp_mod.mlp_block(bp["mlp"], h, cfg)
+        x = x + f
+    res_axes = (
+        ("batch", "seq_sp", None) if perf.seq_parallel_residual
+        else ("batch", "act_seq", None)
+    )
+    return constrain(x, res_axes), aux
+
+
+def forward_hidden(
+    params: dict, x: jax.Array, cfg: ArchConfig, perf: PerfConfig = BASELINE
+) -> tuple[jax.Array, jax.Array]:
+    """Embedding-space input → final hidden states (+ summed aux loss)."""
+    p = period_len(cfg)
+
+    def period_body(carry, pp):
+        x, aux = carry
+        for i in range(p):
+            x, a = _apply_block(pp[f"pos{i}"], x, cfg, i, perf)
+            aux = aux + a
+        return (x, aux), None
+
+    if perf.remat == "full":
+        period_body = jax.checkpoint(period_body)
+    elif perf.remat == "dots":
+        period_body = jax.checkpoint(
+            period_body,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+        )
+
+    (x, aux), _ = jax.lax.scan(
+        period_body, (x, jnp.zeros((), jnp.float32)), params["periods"]
+    )
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux
+
+
+def _lm_head(params: dict, cfg: ArchConfig) -> jax.Array:
+    if "lm_head" in params:
+        return params["lm_head"]
+    return params["embed"].T   # tied
+
+
+def lm_loss(
+    params: dict,
+    batch: dict,
+    cfg: ArchConfig,
+    perf: PerfConfig = BASELINE,
+    aux_weight: float = 0.01,
+) -> jax.Array:
+    """Mean next-token (or frame-label) CE, chunked over the sequence so the
+    full (B, S, V) logits tensor is never materialized."""
+    x = embed_inputs(params, batch, cfg)
+    hidden, aux = forward_hidden(params, x, cfg, perf)
+    labels = batch["labels"]
+    if cfg.causal:
+        # next-token prediction: shift left
+        hidden = hidden[:, :-1]
+        labels = labels[:, 1:]
+    head = _lm_head(params, cfg)
+
+    b, s, d = hidden.shape
+    chunk = min(perf.loss_chunk, s)
+    n_chunks = (s + chunk - 1) // chunk
+    pad = n_chunks * chunk - s
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+
+    hidden = hidden.reshape(b, n_chunks, chunk, d)
+    labels = labels.reshape(b, n_chunks, chunk)
+
+    def chunk_body(carry, inp):
+        nll_sum, count = carry
+        hc, lc = inp                                     # (B, chunk, d), (B, chunk)
+        logits = (hc @ head).astype(jnp.float32)
+        logits = constrain(logits, ("batch", None, "act_vocab"))
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, lc[..., None].clip(0), axis=-1)[..., 0]
+        mask = (lc != -1).astype(jnp.float32)
+        return (nll_sum + jnp.sum((lse - ll) * mask), count + jnp.sum(mask)), None
+
+    (nll, cnt), _ = jax.lax.scan(
+        chunk_body,
+        (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (jnp.moveaxis(hidden, 1, 0), jnp.moveaxis(labels, 1, 0)),
+    )
+    loss = nll / jnp.maximum(cnt, 1.0)
+    return loss + aux_weight * aux
+
+
+def logits_at(
+    params: dict, hidden: jax.Array, cfg: ArchConfig
+) -> jax.Array:
+    """Vocab logits for given hidden positions (B, S', d) → (B, S', V)."""
+    return (hidden @ _lm_head(params, cfg)).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+class DecodeState(NamedTuple):
+    caches: Any            # per-period stacked cache pytree
+
+
+def _period_cache_init(
+    cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16
+) -> dict:
+    out = {}
+    for i in range(period_len(cfg)):
+        if cfg.layer_kind(i) == "attn":
+            out[f"pos{i}"] = attn.init_cache(cfg, batch, max_len, dtype)
+        else:
+            out[f"pos{i}"] = m2.init_ssm_cache(cfg, batch, dtype)
+    return out
+
+
+def init_decode_state(
+    cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16
+) -> DecodeState:
+    period = _period_cache_init(cfg, batch, max_len, dtype)
+    stacked = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (num_periods(cfg),) + a.shape), period
+    )
+    return DecodeState(caches=stacked)
+
+
+def prefill(
+    params: dict,
+    batch: dict,
+    cfg: ArchConfig,
+    max_len: int,
+    perf: PerfConfig = BASELINE,
+    long_context: bool = False,
+) -> tuple[jax.Array, DecodeState]:
+    """Full-context forward that materializes decode caches.
+    Returns (last-position logits (B, V), state)."""
+    x = embed_inputs(params, batch, cfg)
+    p = period_len(cfg)
+
+    def period_body(x, pp):
+        caches = {}
+        for i in range(p):
+            h = rms_norm(x, pp[f"pos{i}"]["ln1"], cfg.norm_eps)
+            if cfg.layer_kind(i) == "attn":
+                mix, cache = attn.prefill_cache(
+                    pp[f"pos{i}"]["attn"], h, cfg, max_len,
+                    long_context=long_context, impl=perf.attention_impl,
+                    scores_dtype=(
+                        jnp.bfloat16 if perf.attn_scores_dtype == "bfloat16" else None
+                    ),
+                    triangular=perf.attn_triangular,
+                )
+            else:
+                mix, cache = m2.mamba2_block(
+                    pp[f"pos{i}"]["ssm"], h, cfg, impl=perf.ssd_impl,
+                    chunk=perf.ssd_chunk, return_state=True,
+                )
+            caches[f"pos{i}"] = cache
+            x = x + mix
+            if cfg.d_ff:
+                h = rms_norm(x, pp[f"pos{i}"]["ln2"], cfg.norm_eps)
+                if cfg.layer_is_moe(i):
+                    f, _ = moe_mod.moe_block(
+                        pp[f"pos{i}"]["moe"], h, cfg, perf.moe_capacity_factor
+                    )
+                else:
+                    f = mlp_mod.mlp_block(pp[f"pos{i}"]["mlp"], h, cfg)
+                x = x + f
+            x = constrain(x, ("batch", "act_seq", None))
+        return x, caches
+
+    x, caches = jax.lax.scan(period_body, x, params["periods"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_at(params, x[:, -1:, :], cfg)[:, 0]
+    return logits, DecodeState(caches=caches)
+
+
+def decode_step(
+    params: dict,
+    state: DecodeState,
+    token: jax.Array,            # (B,) int32
+    cfg: ArchConfig,
+    perf: PerfConfig = BASELINE,
+    long_context: bool = False,
+) -> tuple[jax.Array, DecodeState]:
+    """One decode step for every sequence in the batch → (logits (B,V), state)."""
+    x = jnp.take(params["embed"], token[:, None], axis=0)
+    x = constrain(x, ("batch", None, None))
+    p = period_len(cfg)
+
+    def period_body(x, inp):
+        pp, pc = inp
+        new_caches = {}
+        for i in range(p):
+            h = rms_norm(x, pp[f"pos{i}"]["ln1"], cfg.norm_eps)
+            if cfg.layer_kind(i) == "attn":
+                mix, cache = attn.attention_decode(
+                    pp[f"pos{i}"]["attn"], h, pc[f"pos{i}"], cfg,
+                    long_context=long_context,
+                )
+            else:
+                mix, cache = m2.mamba2_decode(pp[f"pos{i}"]["ssm"], h, pc[f"pos{i}"], cfg)
+            new_caches[f"pos{i}"] = cache
+            x = x + mix
+            if cfg.d_ff:
+                h = rms_norm(x, pp[f"pos{i}"]["ln2"], cfg.norm_eps)
+                if cfg.layer_is_moe(i):
+                    f, _ = moe_mod.moe_block(
+                        pp[f"pos{i}"]["moe"], h, cfg, perf.moe_capacity_factor
+                    )
+                else:
+                    f = mlp_mod.mlp_block(pp[f"pos{i}"]["mlp"], h, cfg)
+                x = x + f
+        return x, new_caches
+
+    x, new_caches = jax.lax.scan(period_body, x, (params["periods"], state.caches))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_at(params, x, cfg)[:, 0]
+    return logits, DecodeState(caches=new_caches)

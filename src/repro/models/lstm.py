@@ -1,0 +1,38 @@
+"""The paper's DL accelerator as a model: LSTM (hidden 20) time-series
+classifier [13].  Drives the faithful-repro examples and the duty-cycle
+serving demo; its inference phase is what Table 2 characterizes."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_lstm import LstmConfig
+from repro.kernels.lstm import ops as lstm_ops
+from repro.models.common import Spec, init_from_specs
+
+
+def lstm_specs(cfg: LstmConfig) -> dict:
+    i, h, c = cfg.input_dim, cfg.hidden_size, cfg.num_classes
+    return {
+        "w_ih": Spec((i, 4 * h), (None, None)),
+        "w_hh": Spec((h, 4 * h), (None, None)),
+        "b": Spec((4 * h,), (None,), init="zeros"),
+        "w_out": Spec((h, c), (None, None)),
+        "b_out": Spec((c,), (None,), init="zeros"),
+    }
+
+
+def init_params(cfg: LstmConfig, key: jax.Array, dtype=jnp.float32) -> dict:
+    return init_from_specs(lstm_specs(cfg), key, dtype)
+
+
+def apply(params: dict, x: jax.Array, impl: str = "auto") -> jax.Array:
+    """x (B, S, I) → class logits (B, C): last hidden state → linear head."""
+    _, (h, _) = lstm_ops.lstm(x, params["w_ih"], params["w_hh"], params["b"], impl=impl)
+    return h @ params["w_out"] + params["b_out"]
+
+
+def loss_fn(params: dict, x: jax.Array, y: jax.Array, impl: str = "auto") -> jax.Array:
+    logits = apply(params, x, impl).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=-1))

@@ -1,0 +1,167 @@
+"""Mamba-2 (SSD) mixer block + O(1) decode state.
+
+Block structure (Mamba-2 paper, §7): separate projections for z (gate),
+x_inner, B, C, dt; short causal depthwise conv over [x;B;C]; SSD scan;
+gated RMSNorm; output projection.  Heads (= d_inner/head_dim) are sharded
+over the model axis — B/C are per-group (g=1 here) and replicated, so the
+mixer itself needs zero collectives.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import constrain
+from repro.kernels.ssd import ops as ssd_ops
+from repro.models.common import Spec, rms_norm
+
+
+class SSMCache(NamedTuple):
+    state: jax.Array       # (B, H, P, N) fp32 SSD state
+    conv: jax.Array        # (B, W-1, conv_dim) trailing conv inputs
+
+
+def mamba2_specs(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    di = cfg.ssm_d_inner
+    g, n, h = cfg.ssm_num_groups, cfg.ssm_state, cfg.ssm_num_heads
+    w = cfg.ssm_conv_width
+    conv_dim = di + 2 * g * n
+    return {
+        "w_z": Spec((d, di), ("embed", "ssm_inner")),
+        "w_x": Spec((d, di), ("embed", "ssm_inner")),
+        "w_b": Spec((d, g * n), ("embed", None)),
+        "w_c": Spec((d, g * n), ("embed", None)),
+        "w_dt": Spec((d, h), ("embed", "ssm_inner")),
+        "dt_bias": Spec((h,), ("ssm_inner",), init="zeros"),
+        "a_log": Spec((h,), ("ssm_inner",), init="zeros"),   # A = −exp(a_log)
+        "d_skip": Spec((h,), ("ssm_inner",), init="ones"),
+        "conv_w": Spec((w, conv_dim), ("conv", "ssm_inner")),
+        "conv_b": Spec((conv_dim,), ("ssm_inner",), init="zeros"),
+        "out_norm": Spec((di,), ("norm",), init="ones"),
+        "w_out": Spec((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv.  x (B, S, C), w (W, C) → (B, S, C)."""
+    width = w.shape[0]
+    pads = [jnp.zeros_like(x[:, :1]).repeat(width - 1, axis=1), x]
+    xp = jnp.concatenate(pads, axis=1)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i][None, None, :] for i in range(width))
+    return y + b[None, None, :]
+
+
+def _conv_step(x_t: jax.Array, conv_cache: jax.Array, w: jax.Array, b: jax.Array):
+    """Single-step conv using the cached last W−1 inputs.
+    x_t (B, C); conv_cache (B, W−1, C) → (y_t, new_cache)."""
+    width = w.shape[0]
+    window = jnp.concatenate([conv_cache, x_t[:, None]], axis=1)       # (B, W, C)
+    y = jnp.einsum("bwc,wc->bc", window, w) + b[None, :]
+    return y, window[:, -(width - 1):]
+
+
+def _split_proj(params, x, cfg: ArchConfig):
+    z = x @ params["w_z"]
+    xin = x @ params["w_x"]
+    bm = x @ params["w_b"]
+    cm = x @ params["w_c"]
+    dt = x @ params["w_dt"]
+    return z, xin, bm, cm, dt
+
+
+def mamba2_block(
+    params: dict,
+    x: jax.Array,                 # (B, S, d)
+    cfg: ArchConfig,
+    *,
+    impl: str = "auto",
+    chunk: int = 128,
+    init_state: jax.Array | None = None,
+    return_state: bool = False,
+):
+    """Full-sequence SSD mixer (train / prefill)."""
+    b, s, d = x.shape
+    g, n, h, p = cfg.ssm_num_groups, cfg.ssm_state, cfg.ssm_num_heads, cfg.ssm_head_dim
+    z, xin, bm, cm, dt = _split_proj(params, x, cfg)
+
+    raw_xbc = jnp.concatenate([xin, bm, cm], axis=-1)
+    xbc = jax.nn.silu(_causal_conv(raw_xbc, params["conv_w"], params["conv_b"]))
+    xin, bm, cm = jnp.split(xbc, [cfg.ssm_d_inner, cfg.ssm_d_inner + g * n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+
+    xh = xin.reshape(b, s, h, p)
+    xh = constrain(xh, ("batch", "act_seq", "act_heads", None))
+    # pad sequence to a chunk multiple (SSD requires it; tail is masked by
+    # dt=0 ⇒ decay=1, no state update)
+    pad = (-s) % chunk
+    if pad:
+        zp = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        xh, dt = zp(xh), zp(dt)
+        bm2, cm2 = zp(bm.reshape(b, s, g, n)), zp(cm.reshape(b, s, g, n))
+    else:
+        bm2, cm2 = bm.reshape(b, s, g, n), cm.reshape(b, s, g, n)
+
+    y, state = ssd_ops.ssd(
+        xh, dt, a, bm2, cm2, params["d_skip"],
+        chunk=chunk, init_state=init_state, impl=impl,
+    )
+    y = y[:, :s].reshape(b, s, cfg.ssm_d_inner)
+    y = rms_norm(y, params["out_norm"], cfg.norm_eps) * jax.nn.silu(z)
+    out = y @ params["w_out"]
+    if return_state:
+        width = cfg.ssm_conv_width
+        conv_dim = cfg.ssm_d_inner + 2 * g * n
+        tail = raw_xbc[:, -(width - 1):]
+        need = (width - 1) - tail.shape[1]
+        if need > 0:
+            tail = jnp.concatenate(
+                [jnp.zeros((b, need, conv_dim), tail.dtype), tail], axis=1
+            )
+        return out, SSMCache(state=state, conv=tail)
+    return out
+
+
+def init_ssm_cache(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16) -> SSMCache:
+    g, n = cfg.ssm_num_groups, cfg.ssm_state
+    conv_dim = cfg.ssm_d_inner + 2 * g * n
+    return SSMCache(
+        state=jnp.zeros((batch, cfg.ssm_num_heads, cfg.ssm_head_dim, n), jnp.float32),
+        conv=jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim), dtype),
+    )
+
+
+def mamba2_decode(
+    params: dict,
+    x: jax.Array,                 # (B, 1, d)
+    cache: SSMCache,
+    cfg: ArchConfig,
+) -> tuple[jax.Array, SSMCache]:
+    """O(1) single-token decode."""
+    b, s, d = x.shape
+    assert s == 1
+    g, n, h, p = cfg.ssm_num_groups, cfg.ssm_state, cfg.ssm_num_heads, cfg.ssm_head_dim
+    z, xin, bm, cm, dt = _split_proj(params, x[:, 0], cfg)
+
+    xbc = jnp.concatenate([xin, bm, cm], axis=-1)
+    xbc, new_conv = _conv_step(xbc, cache.conv, params["conv_w"], params["conv_b"])
+    xbc = jax.nn.silu(xbc)
+    xin, bm, cm = jnp.split(xbc, [cfg.ssm_d_inner, cfg.ssm_d_inner + g * n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+
+    y, new_state = ssd_ops.ssd_decode_step(
+        xin.reshape(b, h, p), dt, a,
+        bm.reshape(b, g, n), cm.reshape(b, g, n),
+        params["d_skip"], cache.state,
+    )
+    y = y.reshape(b, cfg.ssm_d_inner)
+    y = rms_norm(y, params["out_norm"], cfg.norm_eps) * jax.nn.silu(z)
+    out = (y @ params["w_out"])[:, None, :]
+    return out, SSMCache(state=new_state, conv=new_conv)

@@ -1,0 +1,32 @@
+"""Dense FFN: SwiGLU (3 matrices) or GELU (2 matrices)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import constrain
+from repro.models.common import Spec
+
+
+def mlp_specs(cfg: ArchConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.mlp_kind == "swiglu":
+        return {
+            "w_gate": Spec((d, f), ("embed", "mlp")),
+            "w_up": Spec((d, f), ("embed", "mlp")),
+            "w_down": Spec((f, d), ("mlp", "embed")),
+        }
+    return {
+        "w_up": Spec((d, f), ("embed", "mlp")),
+        "w_down": Spec((f, d), ("mlp", "embed")),
+    }
+
+
+def mlp_block(params: dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    if cfg.mlp_kind == "swiglu":
+        h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    else:
+        h = jax.nn.gelu(x @ params["w_up"])
+    h = constrain(h, ("batch", "act_seq", "act_mlp"))
+    return h @ params["w_down"]

@@ -1,0 +1,122 @@
+"""Model zoo: config → specs/params/steps/input-specs for every arch."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.configs.perf import BASELINE, PerfConfig
+from repro.models import decoder
+from repro.models.common import (
+    init_from_specs,
+    pspecs_from_specs,
+    shapes_from_specs,
+)
+
+
+def specs(cfg: ArchConfig) -> dict:
+    return decoder.decoder_specs(cfg)
+
+
+def init_params(cfg: ArchConfig, key: jax.Array, dtype=jnp.bfloat16) -> dict:
+    return init_from_specs(specs(cfg), key, dtype)
+
+
+def param_shapes(cfg: ArchConfig, dtype=jnp.bfloat16) -> dict:
+    return shapes_from_specs(specs(cfg), dtype)
+
+
+def param_pspecs(cfg: ArchConfig, mesh=None) -> dict:
+    return pspecs_from_specs(specs(cfg), mesh=mesh)
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins, dry-run style)
+# ---------------------------------------------------------------------------
+def batch_spec(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    """Abstract input batch for one (arch × shape) cell."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    bf16 = jnp.bfloat16
+    sds = jax.ShapeDtypeStruct
+
+    if shape.kind in ("train", "prefill"):
+        if cfg.frontend == "vision":
+            n = cfg.frontend_tokens
+            batch = {
+                "tokens": sds((b, s - n), i32),
+                "patch_embeds": sds((b, n, cfg.frontend_dim), bf16),
+            }
+        elif cfg.frontend == "audio":
+            batch = {"features": sds((b, s, cfg.frontend_dim), bf16)}
+        else:
+            batch = {"tokens": sds((b, s), i32)}
+        if shape.kind == "train":
+            batch["labels"] = sds((b, s), i32)
+        return batch
+
+    if shape.kind == "decode":
+        state = jax.eval_shape(
+            lambda: decoder.init_decode_state(cfg, b, s)
+        )
+        return {"token": sds((b,), i32), "state": state}
+
+    raise ValueError(shape.kind)
+
+
+def make_batch(cfg: ArchConfig, shape: ShapeSpec, key: jax.Array) -> dict:
+    """Concrete random batch matching :func:`batch_spec` (smoke tests)."""
+    spec = batch_spec(cfg, shape)
+
+    def mk(k, s):
+        if s.dtype == jnp.int32:
+            hi = cfg.vocab_size if cfg.vocab_size else 2
+            return jax.random.randint(k, s.shape, 0, hi, jnp.int32)
+        return jax.random.normal(k, s.shape, jnp.float32).astype(s.dtype)
+
+    leaves, treedef = jax.tree.flatten(spec)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(treedef, [mk(k, s) for k, s in zip(keys, leaves)])
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+# ---------------------------------------------------------------------------
+def loss_fn(
+    params: dict, batch: dict, cfg: ArchConfig, perf: PerfConfig = BASELINE
+) -> jax.Array:
+    return decoder.lm_loss(params, batch, cfg, perf)
+
+
+def prefill_fn(
+    params: dict,
+    batch: dict,
+    cfg: ArchConfig,
+    max_len: int,
+    perf: PerfConfig = BASELINE,
+    long_context: bool = False,
+):
+    return decoder.prefill(params, batch, cfg, max_len, perf, long_context)
+
+
+def decode_fn(
+    params: dict,
+    state: decoder.DecodeState,
+    token: jax.Array,
+    cfg: ArchConfig,
+    perf: PerfConfig = BASELINE,
+    long_context: bool = False,
+):
+    return decoder.decode_step(params, state, token, cfg, perf, long_context)
+
+
+def encode_fn(
+    params: dict, batch: dict, cfg: ArchConfig, perf: PerfConfig = BASELINE
+) -> jax.Array:
+    """Encoder-only forward → per-position logits (hubert prefill path)."""
+    x = decoder.embed_inputs(params, batch, cfg)
+    hidden, _ = decoder.forward_hidden(params, x, cfg, perf)
+    return decoder.logits_at(params, hidden, cfg)

@@ -1,0 +1,15 @@
+from repro.optim.adamw import AdamW, AdamWState, adamw, clip_by_global_norm, global_norm
+from repro.optim.grad_compress import (
+    CompressState,
+    compress_psum,
+    dequantize,
+    init_error,
+    quantize,
+)
+from repro.optim.schedules import constant, cosine_with_warmup
+
+__all__ = [
+    "AdamW", "AdamWState", "adamw", "clip_by_global_norm", "global_norm",
+    "CompressState", "compress_psum", "dequantize", "init_error", "quantize",
+    "constant", "cosine_with_warmup",
+]

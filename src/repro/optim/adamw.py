@@ -1,0 +1,85 @@
+"""AdamW from scratch (no optax dependency), ZeRO-friendly.
+
+Moments are stored in a configurable dtype (``bfloat16`` halves optimizer
+HBM — required to fit jamba-398B training on 256 v5e chips, DESIGN.md §6)
+and inherit the parameters' sharding, so pjit shards optimizer state the
+same way as parameters (ZeRO-style: no replication).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array     # () int32
+    m: Any              # pytree like params
+    v: Any              # pytree like params
+
+
+class AdamW(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree: Any, max_norm: float) -> tuple[Any, jax.Array]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree), norm
+
+
+def adamw(
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    moment_dtype=jnp.float32,
+    clip_norm: float | None = 1.0,
+) -> AdamW:
+    """Returns (init, update).  ``update(grads, state, params, lr)``."""
+
+    def init(params: Any) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            m=jax.tree.map(zeros, params),
+            v=jax.tree.map(zeros, params),
+        )
+
+    def update(grads: Any, state: AdamWState, params: Any, lr: jax.Array):
+        if clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        else:
+            gnorm = global_norm(grads)
+        step = state.step + 1
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            mf = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+            vf = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(gf)
+            mhat = mf / bc1
+            vhat = vf / bc2
+            delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+            return new_p, mf.astype(moment_dtype), vf.astype(moment_dtype)
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_m = jax.tree.leaves(state.m)
+        flat_v = jax.tree.leaves(state.v)
+        out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+        new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+        new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+        return new_p, AdamWState(step=step, m=new_m, v=new_v), gnorm
+
+    return AdamW(init=init, update=update)

@@ -1,0 +1,142 @@
+"""Multi-tenant duty-cycling: several models sharing one accelerator slice.
+
+The paper's related work [5] (Temporal Accelerators) time-multiplexes one
+FPGA between bitstreams, paying a reconfiguration per switch.  The pod
+analogue: several models share one serving slice; a switch = release +
+bring-up (the configuration phase).  This scheduler generalizes the
+ski-rental policy to N tenants under a shared HBM budget:
+
+* requests for a RESIDENT model are served directly;
+* requests for a non-resident model trigger bring-up, evicting resident
+  models (cheapest-to-restore first) only if the budget requires it;
+* each resident model is released after its own break-even idle timeout
+  T*_m = E_config(m) / P_idle(m) — per-model ski-rental, so a hot model
+  stays while a cold one ages out.
+
+Energy accounting mirrors core.duty_cycle: per-phase wall time × power.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+from repro.core.phases import CONFIGURATION, IDLE, INFERENCE
+
+
+@dataclasses.dataclass
+class Tenant:
+    name: str
+    bring_up: Callable[[], Any]
+    infer: Callable[[Any, Any], Any]
+    release: Callable[[Any], None]
+    hbm_gb: float                      # resident footprint
+    config_mw: float
+    infer_mw: float
+    idle_mw: float
+    # runtime state
+    handle: Any = None
+    last_used: float = 0.0
+    measured_config_s: Optional[float] = None
+
+    def timeout_s(self) -> Optional[float]:
+        if self.measured_config_s is None or self.idle_mw <= 0:
+            return None
+        return self.measured_config_s * self.config_mw / self.idle_mw
+
+
+class MultiTenantScheduler:
+    def __init__(
+        self,
+        tenants: list[Tenant],
+        hbm_budget_gb: float,
+        clock: Callable[[], float] = time.perf_counter,
+    ):
+        self.tenants = {t.name: t for t in tenants}
+        self.budget = hbm_budget_gb
+        self.clock = clock
+        self.energy_mj = 0.0
+        self.by_phase: dict[str, float] = {}
+        self.configurations = 0
+        self.evictions = 0
+        self._last_account = clock()
+
+    # ---- accounting -------------------------------------------------------
+    def _account_idle(self, now: float) -> None:
+        """Charge idle power of every resident tenant since last event."""
+        dt = now - self._last_account
+        if dt > 0:
+            for t in self.tenants.values():
+                if t.handle is not None:
+                    mj = t.idle_mw * dt
+                    self.energy_mj += mj
+                    self.by_phase[IDLE] = self.by_phase.get(IDLE, 0.0) + mj
+        self._last_account = now
+
+    def _charge(self, phase: str, mw: float, dt: float) -> None:
+        mj = mw * dt
+        self.energy_mj += mj
+        self.by_phase[phase] = self.by_phase.get(phase, 0.0) + mj
+
+    # ---- residency management --------------------------------------------
+    def resident_gb(self) -> float:
+        return sum(t.hbm_gb for t in self.tenants.values() if t.handle is not None)
+
+    def _expire_timeouts(self, now: float) -> None:
+        for t in self.tenants.values():
+            if t.handle is None:
+                continue
+            tout = t.timeout_s()
+            if tout is not None and now - t.last_used >= tout:
+                t.release(t.handle)
+                t.handle = None
+
+    def _evict_for(self, need_gb: float, requester: str) -> None:
+        """Evict idle-longest resident tenants until need_gb fits."""
+        while self.resident_gb() + need_gb > self.budget:
+            candidates = [
+                t for t in self.tenants.values()
+                if t.handle is not None and t.name != requester
+            ]
+            if not candidates:
+                raise MemoryError(
+                    f"cannot fit {requester}: budget {self.budget} GB"
+                )
+            victim = min(candidates, key=lambda t: t.last_used)
+            victim.release(victim.handle)
+            victim.handle = None
+            self.evictions += 1
+
+    # ---- request path ------------------------------------------------------
+    def submit(self, name: str, x: Any) -> Any:
+        now = self.clock()
+        self._account_idle(now)
+        self._expire_timeouts(now)
+        t = self.tenants[name]
+        if t.handle is None:
+            self._evict_for(t.hbm_gb, name)
+            t0 = self.clock()
+            t.handle = t.bring_up()
+            t1 = self.clock()
+            t.measured_config_s = t1 - t0
+            self._charge(CONFIGURATION, t.config_mw, t1 - t0)
+            self.configurations += 1
+            self._last_account = t1
+        t0 = self.clock()
+        out = t.infer(t.handle, x)
+        t1 = self.clock()
+        self._charge(INFERENCE, t.infer_mw, t1 - t0)
+        t.last_used = t1
+        self._last_account = t1
+        return out
+
+    def summary(self) -> dict:
+        return {
+            "energy_mj": self.energy_mj,
+            "by_phase_mj": dict(self.by_phase),
+            "configurations": self.configurations,
+            "evictions": self.evictions,
+            "resident": [
+                t.name for t in self.tenants.values() if t.handle is not None
+            ],
+        }

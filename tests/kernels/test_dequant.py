@@ -1,0 +1,53 @@
+"""Dequant Pallas kernel vs oracle + quantization round-trip properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.dequant.kernel import dequantize_blocked
+from repro.kernels.dequant.ref import (
+    dequantize_blocked_reference,
+    quantize_blocked,
+)
+
+
+@pytest.mark.parametrize("r,c,group", [(256, 1024, 128), (128, 512, 128), (64, 256, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kernel_matches_reference(r, c, group, dtype):
+    w = jax.random.normal(jax.random.PRNGKey(0), (r, c))
+    q, s = quantize_blocked(w, group=group)
+    ref = dequantize_blocked_reference(q, s, group=group, dtype=dtype)
+    out = dequantize_blocked(
+        q, s, group=group, dtype=dtype, interpret=True, block_r=64, block_c=max(group, 128)
+    )
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    r=st.sampled_from([32, 64]),
+    groups=st.integers(1, 4),
+    scale=st.floats(1e-3, 1e3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_round_trip_error_bound(r, groups, scale, seed):
+    """|w − dequant(quant(w))| ≤ scale_per_group / 2 element-wise (half-ULP
+    of the int8 grid) — the compression is lossy but bounded."""
+    group = 128
+    w = jax.random.normal(jax.random.PRNGKey(seed), (r, groups * group)) * scale
+    q, s = quantize_blocked(w, group=group)
+    back = dequantize_blocked_reference(q, s, group=group, dtype=jnp.float32)
+    err = jnp.abs(w - back)
+    # half-ULP of the int8 grid, with fp32 division-rounding allowance
+    bound = jnp.repeat(s, group, axis=1) * 0.5 * (1 + 1e-4) + 1e-9
+    assert bool(jnp.all(err <= bound))
+
+
+def test_quantize_preserves_zero_and_extremes():
+    w = jnp.array([[0.0] * 64 + [1.0] * 32 + [-1.0] * 32], jnp.float32)
+    q, s = quantize_blocked(w, group=128)
+    back = dequantize_blocked_reference(q, s, group=128, dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(back[0, :64]), 0.0)
+    np.testing.assert_allclose(np.asarray(back[0, 64:]), np.asarray(w[0, 64:]), rtol=1e-2)

@@ -1,0 +1,62 @@
+"""LSTM Pallas kernel (the paper's accelerator) vs the jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.lstm.kernel import lstm_pallas
+from repro.kernels.lstm.ref import lstm_reference
+
+
+def make(key, b, s, i, h):
+    ks = jax.random.split(key, 6)
+    return (
+        jax.random.normal(ks[0], (b, s, i)),
+        jax.random.normal(ks[1], (i, 4 * h)) * 0.3,
+        jax.random.normal(ks[2], (h, 4 * h)) * 0.3,
+        jax.random.normal(ks[3], (4 * h,)) * 0.1,
+        jax.random.normal(ks[4], (b, h)) * 0.5,
+        jax.random.normal(ks[5], (b, h)) * 0.5,
+    )
+
+
+@pytest.mark.parametrize(
+    "b,s,i,h",
+    [
+        (4, 32, 6, 20),      # the paper's accelerator config [13]
+        (1, 16, 3, 7),       # odd sizes exercise lane padding
+        (8, 64, 12, 20),
+    ],
+)
+def test_kernel_matches_reference(b, s, i, h):
+    x, wih, whh, bias, h0, c0 = make(jax.random.PRNGKey(0), b, s, i, h)
+    hs_r, (h_r, c_r) = lstm_reference(x, wih, whh, bias, h0, c0)
+    hs_k, (h_k, c_k) = lstm_pallas(x, wih, whh, bias, h0, c0, interpret=True)
+    np.testing.assert_allclose(np.asarray(hs_k), np.asarray(hs_r), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_r), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(c_k), np.asarray(c_r), atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    s=st.sampled_from([8, 24]),
+    i=st.integers(2, 8),
+    h=st.sampled_from([5, 20, 33]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_reference_hypothesis(b, s, i, h, seed):
+    x, wih, whh, bias, h0, c0 = make(jax.random.PRNGKey(seed), b, s, i, h)
+    hs_r, _ = lstm_reference(x, wih, whh, bias)
+    hs_k, _ = lstm_pallas(x, wih, whh, bias, interpret=True)
+    np.testing.assert_allclose(np.asarray(hs_k), np.asarray(hs_r), atol=1e-5)
+
+
+def test_zero_initial_state_padding_invariant():
+    """Lane padding must not perturb real hidden units (zero-state start)."""
+    x, wih, whh, bias, _, _ = make(jax.random.PRNGKey(3), 2, 8, 6, 20)
+    hs_128, _ = lstm_pallas(x, wih, whh, bias, interpret=True, lane=128)
+    hs_256, _ = lstm_pallas(x, wih, whh, bias, interpret=True, lane=256)
+    np.testing.assert_allclose(np.asarray(hs_128), np.asarray(hs_256), atol=1e-6)

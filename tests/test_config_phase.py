@@ -1,0 +1,124 @@
+"""Experiment 1 reproduction: configuration-phase parameter optimization.
+
+Every assertion cites the paper number it validates (§5.2).
+"""
+import itertools
+
+import pytest
+
+from repro.core import (
+    BEST_PARAMS,
+    SPARTAN7_XC7S15,
+    SPARTAN7_XC7S25,
+    SPI_BUSWIDTHS,
+    SPI_CLOCKS_MHZ,
+    WORST_PARAMS,
+    ConfigParams,
+    energy_reduction_factor,
+    optimal_params,
+    sweep_config_space,
+    time_reduction_factor,
+)
+
+
+def rel_err(a, b):
+    return abs(a - b) / abs(b)
+
+
+class TestPaperAnchors:
+    def test_best_config_time(self):
+        # paper: 36.15 ms (Quad SPI @ 66 MHz, compression)
+        assert rel_err(SPARTAN7_XC7S15.config_time_ms(BEST_PARAMS), 36.145) < 1e-3
+
+    def test_best_config_energy(self):
+        # paper: 11.85 mJ
+        assert rel_err(SPARTAN7_XC7S15.config_energy_mj(BEST_PARAMS), 11.85) < 5e-3
+
+    def test_best_config_avg_power(self):
+        # Table 2: 327.9 mW average over the configuration phase
+        assert rel_err(SPARTAN7_XC7S15.config_power_mw(BEST_PARAMS), 327.9) < 5e-3
+
+    def test_worst_config_energy(self):
+        # paper: 475.56 mJ (Single SPI @ 3 MHz, no compression)
+        assert rel_err(SPARTAN7_XC7S15.config_energy_mj(WORST_PARAMS), 475.56) < 5e-3
+
+    def test_energy_reduction_factor_40x(self):
+        # paper: 40.13-fold reduction in configuration energy
+        assert rel_err(energy_reduction_factor(SPARTAN7_XC7S15), 40.13) < 5e-3
+
+    def test_time_reduction_factor_41x(self):
+        # paper: 41.4-fold improvement in configuration time
+        assert rel_err(time_reduction_factor(SPARTAN7_XC7S15), 41.4) < 5e-3
+
+    def test_setup_stage_floor(self):
+        # paper: Setup = 27 ms @ ~288 mW → ~7 mJ irreducible floor
+        assert SPARTAN7_XC7S15.setup_time_ms == 27.0
+        assert 6.5 < SPARTAN7_XC7S15.setup_energy_mj < 8.0
+
+    def test_xc7s25_anchors(self):
+        # paper: XC7S25 optimal settings → 38.09 ms, 13.75 mJ
+        assert rel_err(SPARTAN7_XC7S25.config_time_ms(BEST_PARAMS), 38.09) < 1e-3
+        assert rel_err(SPARTAN7_XC7S25.config_energy_mj(BEST_PARAMS), 13.75) < 5e-3
+
+    def test_optimal_is_fastest_widest_compressed(self):
+        # paper: "the highest clock frequency and widest SPI buswidth optimize
+        # configuration energy"
+        for dev in (SPARTAN7_XC7S15, SPARTAN7_XC7S25):
+            opt = optimal_params(dev, "energy")
+            assert opt.params == ConfigParams(4, 66, True)
+            assert optimal_params(dev, "time").params == ConfigParams(4, 66, True)
+
+
+class TestSweepStructure:
+    def test_sweep_covers_full_space(self):
+        pts = sweep_config_space(SPARTAN7_XC7S15)
+        assert len(pts) == len(SPI_BUSWIDTHS) * len(SPI_CLOCKS_MHZ) * 2
+        seen = {(-1, -1.0, False)}
+        for s in pts:
+            key = (s.params.buswidth, s.params.clock_mhz, s.params.compression)
+            assert key not in seen
+            seen.add(key)
+
+    def test_time_monotone_in_rate(self):
+        # loading time strictly decreases as lanes×MHz grows (fixed compression)
+        for c in (False, True):
+            pts = sorted(
+                (p for p in sweep_config_space(SPARTAN7_XC7S15) if p.params.compression == c),
+                key=lambda s: s.params.lanes_mhz,
+            )
+            for a, b in itertools.pairwise(pts):
+                if a.params.lanes_mhz < b.params.lanes_mhz:
+                    assert a.load_time_ms > b.load_time_ms
+
+    def test_energy_monotone_in_rate(self):
+        # static-power dominance ⇒ faster loading is always lower energy
+        for c in (False, True):
+            pts = sorted(
+                (p for p in sweep_config_space(SPARTAN7_XC7S15) if p.params.compression == c),
+                key=lambda s: s.params.lanes_mhz,
+            )
+            for a, b in itertools.pairwise(pts):
+                if a.params.lanes_mhz < b.params.lanes_mhz:
+                    assert a.config_energy_mj > b.config_energy_mj
+
+    def test_compression_raises_load_power_lowers_energy(self):
+        # paper: "bitstream compression led to higher power in this stage"
+        # yet lower overall configuration energy
+        dev = SPARTAN7_XC7S15
+        for w in SPI_BUSWIDTHS:
+            for f in SPI_CLOCKS_MHZ:
+                nc = ConfigParams(w, f, False)
+                cc = ConfigParams(w, f, True)
+                assert dev.load_power_mw(cc) > dev.load_power_mw(nc)
+                assert dev.config_energy_mj(cc) < dev.config_energy_mj(nc)
+
+    def test_setup_power_constant_across_settings(self):
+        # paper: "The Setup stage maintained a consistent power consumption
+        # of around 288 mW"
+        assert SPARTAN7_XC7S15.setup_power_mw == pytest.approx(288.0)
+
+    def test_invalid_params_rejected(self):
+        with pytest.raises(ValueError):
+            ConfigParams(buswidth=3)
+        with pytest.raises(ValueError):
+            ConfigParams(clock_mhz=100)

@@ -1,0 +1,158 @@
+"""Runnable duty-cycle controller: strategies, accounting, auto decision.
+
+Uses a FAKE clock + fake engine so the tests are instant and deterministic;
+the live-engine path is exercised by examples/duty_cycle_serving.py.
+"""
+import pytest
+
+from repro.core import energy_model as em
+from repro.core.duty_cycle import DutyCycleController, PowerModel
+from repro.core.phases import CONFIGURATION, IDLE, INFERENCE
+from repro.serving.scheduler import run_schedule
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def sleep(self, dt):
+        self.t += dt
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def make_controller(strategy, clock, config_s=0.5, infer_s=0.01):
+    power = PowerModel(config_mw=300.0, infer_mw=170.0, idle_mw=134.0)
+
+    def bring_up():
+        clock.advance(config_s)
+        return "engine"
+
+    def infer(h, x):
+        clock.advance(infer_s)
+        return x
+
+    def release(h):
+        pass
+
+    return DutyCycleController(bring_up, infer, release, power, strategy, clock=clock)
+
+
+def drive(controller, clock, n, period_s):
+    return run_schedule(
+        controller, range(n), period_s, sleep=clock.sleep, clock=clock
+    )
+
+
+class TestStrategies:
+    def test_on_off_configures_every_request(self):
+        clock = FakeClock()
+        c = make_controller("on_off", clock)
+        res = drive(c, clock, 5, period_s=2.0)
+        assert res.n_configurations == 5
+        assert res.n_requests == 5
+
+    def test_idle_waiting_configures_once(self):
+        clock = FakeClock()
+        c = make_controller("idle_waiting", clock)
+        res = drive(c, clock, 5, period_s=2.0)
+        assert res.n_configurations == 1
+
+    def test_energy_ordering_matches_analytical_model(self):
+        """At a period below the crossover, IW must use less energy; above,
+        more — same decision the analytical model predicts."""
+        # measured item: config 0.5 s @300 mW; infer 0.01 s @170 mW; idle 134 mW
+        # crossover ≈ (0.5·300 + ... )/134 ≈ 1.13 s
+        for period, iw_wins in ((0.6, True), (3.0, False)):
+            clock = FakeClock()
+            oo = drive(make_controller("on_off", clock), clock, 6, period)
+            clock2 = FakeClock()
+            iw = drive(make_controller("idle_waiting", clock2), clock2, 6, period)
+            assert (iw.energy_mj < oo.energy_mj) == iw_wins, period
+
+    def test_auto_releases_at_long_periods(self):
+        clock = FakeClock()
+        c = make_controller("auto", clock)
+        drive(c, clock, 6, period_s=5.0)   # way above crossover
+        s = c.summary()
+        assert s["configurations"] >= 2    # it started releasing
+
+    def test_auto_stays_resident_at_short_periods(self):
+        clock = FakeClock()
+        c = make_controller("auto", clock)
+        drive(c, clock, 6, period_s=0.6)   # below crossover
+        assert c.summary()["configurations"] == 1
+
+    def test_measured_crossover_matches_formula(self):
+        clock = FakeClock()
+        c = make_controller("idle_waiting", clock, config_s=0.5, infer_s=0.01)
+        drive(c, clock, 3, period_s=1.0)
+        item = c.measured_item()
+        expected = em.crossover_period_ms(item)
+        assert c.crossover_ms() == pytest.approx(expected)
+        # sanity: config 150 mJ, infer 1.7 mJ, idle 134 mW → ≈1.12 s
+        assert 1000.0 < expected < 1300.0
+
+    def test_energy_by_phase_accounting(self):
+        clock = FakeClock()
+        c = make_controller("idle_waiting", clock)
+        drive(c, clock, 4, period_s=1.0)
+        by = c.energy_by_phase_mj()
+        assert by[CONFIGURATION] == pytest.approx(0.5 * 300.0)
+        assert by[INFERENCE] == pytest.approx(4 * 0.01 * 170.0, rel=1e-6)
+        assert IDLE in by
+
+
+class TestSkiRental:
+    """The auto policy on IRREGULAR arrivals (the paper's §7 future work):
+    break-even-timeout release is 2-competitive with the clairvoyant
+    optimum on ANY arrival sequence."""
+
+    def gaps(self):
+        import numpy as np
+
+        rng = np.random.default_rng(1)
+        gaps = []
+        for _ in range(5):
+            gaps += list(rng.exponential(0.2, 8))   # burst
+            gaps.append(15.0 + 10.0 * rng.random())  # long gap
+        return gaps
+
+    def run(self, strategy, gaps):
+        clock = FakeClock()
+        c = make_controller(strategy, clock)
+        for g in gaps:
+            clock.advance(g)
+            c.submit(None)
+        return c
+
+    def test_auto_beats_both_statics_on_bursty(self):
+        gaps = self.gaps()
+        e = {s: self.run(s, gaps).energy_mj() for s in
+             ("on_off", "idle_waiting", "auto")}
+        assert e["auto"] < e["on_off"]
+        assert e["auto"] < e["idle_waiting"]
+
+    def test_auto_within_2x_of_offline_optimum(self):
+        gaps = self.gaps()
+        c = self.run("auto", gaps)
+        # clairvoyant optimum: per gap, min(idle-through, release+reconfig);
+        # plus the mandatory inference and first bring-up energy
+        e_cfg = 0.5 * 300.0
+        p_idle = 134.0
+        opt = e_cfg + len(gaps) * 0.01 * 170.0
+        for g in gaps[1:]:
+            opt += min(g * p_idle, e_cfg)
+        assert c.energy_mj() <= 2.0 * opt * (1 + 1e-6)
+
+    def test_timeout_is_break_even(self):
+        clock = FakeClock()
+        c = make_controller("auto", clock, config_s=0.5)
+        clock.advance(1.0)
+        c.submit(None)
+        # T* = E_config / P_idle = (0.5 s · 300 mW) / 134 mW
+        assert c.timeout_s() == pytest.approx(0.5 * 300.0 / 134.0)

@@ -1,0 +1,163 @@
+"""Experiment 2 reproduction: Idle-Waiting vs On-Off (analytical model, Eqs 1-4)."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CALIBRATED_POWERUP_OVERHEAD_MJ as CAL,
+    PAPER_ENERGY_BUDGET_MJ,
+    IdlePowerMethod,
+    IdleWaitingStrategy,
+    OnOffStrategy,
+    compare_strategies,
+    crossover_period_ms,
+    idlewait_n_max,
+    onoff_n_max,
+    paper_lstm_item,
+)
+from repro.core import energy_model as em
+
+
+@pytest.fixture(scope="module")
+def item():
+    return paper_lstm_item()
+
+
+def rel_err(a, b):
+    return abs(a - b) / abs(b)
+
+
+class TestTable2Products:
+    def test_item_energy_raw(self, item):
+        # Table 2 products: configuration 11.853 + execution 0.00649 mJ
+        assert rel_err(item.config_energy_mj, 11.8529) < 1e-3
+        assert rel_err(item.execution_energy_mj, 0.0064915) < 1e-3
+
+    def test_latencies(self, item):
+        assert item.total_time_ms == pytest.approx(36.145 + 0.0401)
+        assert item.execution_time_ms == pytest.approx(0.0401)
+
+    def test_config_dominates_item_energy(self, item):
+        # §1/§3: configuration ≈ 87-99% of per-item energy after optimization
+        # it is still >99% of the optimized item (11.85 of 11.86 mJ)
+        assert item.config_fraction() > 0.99
+
+
+class TestOnOff:
+    def test_n_max_calibrated(self, item):
+        # paper Fig. 8: On-Off consistently supports 346,073 items
+        assert onoff_n_max(item, powerup_overhead_mj=CAL) == 346_073
+
+    def test_n_max_raw_within_1pct(self, item):
+        # raw Table-2 products land within 1.1% of the paper count
+        assert rel_err(onoff_n_max(item), 346_073) < 0.011
+
+    def test_infeasible_below_config_latency(self, item):
+        # paper: "the On-Off strategy is not represented for request periods
+        # below 36.15 ms"
+        s = OnOffStrategy(item, CAL)
+        assert not s.evaluate(36.0, PAPER_ENERGY_BUDGET_MJ).feasible
+        assert s.evaluate(36.2, PAPER_ENERGY_BUDGET_MJ).feasible
+
+    def test_items_independent_of_period(self, item):
+        s = OnOffStrategy(item, CAL)
+        ns = {s.evaluate(t, PAPER_ENERGY_BUDGET_MJ).n_max for t in (40, 60, 80, 100, 120)}
+        assert len(ns) == 1
+
+    def test_lifetime_linear_in_period(self, item):
+        # paper: "the On-Off strategy exhibits a linear increase in system
+        # lifetime as request periods extend"
+        s = OnOffStrategy(item, CAL)
+        l40 = s.evaluate(40, PAPER_ENERGY_BUDGET_MJ).lifetime_ms
+        l80 = s.evaluate(80, PAPER_ENERGY_BUDGET_MJ).lifetime_ms
+        assert l80 == pytest.approx(2 * l40)
+
+
+class TestIdleWaiting:
+    def test_items_at_40ms_2p23x(self, item):
+        # paper: at 40 ms the Idle-Waiting strategy yields 2.23× more items
+        n_iw = idlewait_n_max(item, 40.0, powerup_overhead_mj=CAL)
+        n_oo = onoff_n_max(item, powerup_overhead_mj=CAL)
+        assert rel_err(n_iw / n_oo, 2.23) < 5e-3
+
+    def test_items_range_10_to_120ms(self, item):
+        # paper: ranges from ~257,305 (120 ms) to ~3,085,319 (10 ms)
+        n10 = idlewait_n_max(item, 10.0, powerup_overhead_mj=CAL)
+        n120 = idlewait_n_max(item, 120.0, powerup_overhead_mj=CAL)
+        assert rel_err(n10, 3_085_319) < 1e-4
+        assert rel_err(n120, 257_305) < 1e-4
+
+    def test_crossover_89ms(self, item):
+        # paper: analytical cross point at 89.21 ms
+        assert rel_err(crossover_period_ms(item, powerup_overhead_mj=CAL), 89.21) < 1e-3
+
+    def test_idlewait_wins_below_crossover_only(self, item):
+        cross = crossover_period_ms(item, powerup_overhead_mj=CAL)
+        for t in (40.0, 60.0, 88.0):
+            cmp_ = compare_strategies(item, t, powerup_overhead_mj=CAL)
+            assert cmp_["items_ratio"] > 1.0, t
+        for t in (91.0, 100.0, 120.0):
+            cmp_ = compare_strategies(item, t, powerup_overhead_mj=CAL)
+            assert cmp_["items_ratio"] < 1.0, t
+        assert 88.0 < cross < 91.0
+
+    def test_lifetime_approx_8_58h(self, item):
+        # paper: Idle-Waiting lifetime averages ~8.58 h over 10–120 ms
+        ts = np.arange(10.0, 120.01, 10.0)
+        hours = [
+            idlewait_n_max(item, float(t), powerup_overhead_mj=CAL) * t / 3.6e6 for t in ts
+        ]
+        assert rel_err(float(np.mean(hours)), 8.58) < 5e-3
+
+    def test_lifetime_upper_bound_is_budget_over_idle_power(self, item):
+        # as T_req → ∞ the system is idle-dominated: lifetime → E/P_idle
+        # mJ / mW = seconds → hours
+        bound_h = PAPER_ENERGY_BUDGET_MJ / item.idle_power_mw / 3600.0
+        ts = np.arange(10.0, 120.01, 10.0)
+        for t in ts:
+            h = idlewait_n_max(item, float(t), powerup_overhead_mj=CAL) * t / 3.6e6
+            assert h < bound_h
+        assert rel_err(bound_h, 8.5778) < 1e-3
+
+    def test_feasible_below_onoff_min_period(self, item):
+        # Idle-Waiting can serve periods the On-Off strategy cannot (<36.15 ms)
+        s = IdleWaitingStrategy(item, CAL, method=IdlePowerMethod.BASELINE)
+        r = s.evaluate(10.0, PAPER_ENERGY_BUDGET_MJ)
+        assert r.feasible and r.n_max > 3_000_000
+
+
+class TestEquationConsistency:
+    def test_eq2_affine_in_n(self, item):
+        e1 = em.idlewait_cumulative_energy_mj(item, 1, 40.0)
+        e2 = em.idlewait_cumulative_energy_mj(item, 2, 40.0)
+        e3 = em.idlewait_cumulative_energy_mj(item, 3, 40.0)
+        assert (e3 - e2) == pytest.approx(e2 - e1)
+
+    def test_nmax_is_maximal(self, item):
+        # Eq. 3: E_sum(n_max) ≤ B < E_sum(n_max + 1)
+        for t in (10.0, 40.0, 89.0, 120.0):
+            n = idlewait_n_max(item, t, powerup_overhead_mj=CAL)
+            assert (
+                em.idlewait_cumulative_energy_mj(item, n, t, powerup_overhead_mj=CAL)
+                <= PAPER_ENERGY_BUDGET_MJ
+            )
+            assert (
+                em.idlewait_cumulative_energy_mj(item, n + 1, t, powerup_overhead_mj=CAL)
+                > PAPER_ENERGY_BUDGET_MJ
+            )
+        n = onoff_n_max(item, powerup_overhead_mj=CAL)
+        assert em.onoff_cumulative_energy_mj(item, n, CAL) <= PAPER_ENERGY_BUDGET_MJ
+        assert em.onoff_cumulative_energy_mj(item, n + 1, CAL) > PAPER_ENERGY_BUDGET_MJ
+
+    def test_eq4_lifetime(self, item):
+        s = IdleWaitingStrategy(item, CAL)
+        r = s.evaluate(40.0, PAPER_ENERGY_BUDGET_MJ)
+        assert r.lifetime_ms == pytest.approx(r.n_max * 40.0)
+
+    def test_idle_energy_negative_period_raises(self, item):
+        with pytest.raises(ValueError):
+            em.idle_energy_mj(item, 0.01)  # < execution latency 0.0401 ms
+
+    def test_crossover_infinite_at_zero_idle_power(self, item):
+        assert math.isinf(crossover_period_ms(item, idle_power_mw=0.0))

@@ -1,0 +1,166 @@
+"""Property tests on model-level invariants (hypothesis-driven).
+
+These check semantic properties no allclose-vs-oracle test covers:
+causality, sliding-window locality, GQA/MHA equivalence, RoPE relativity,
+and MoE routing conservation.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_config
+from repro.kernels.flash_attention.ref import (
+    attention_flashlike,
+    attention_reference,
+    repeat_kv,
+)
+from repro.models import decoder, model_zoo as zoo
+
+
+def qkv(seed, b, s, h, kvh, d):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return (
+        jax.random.normal(ks[0], (b, s, h, d)),
+        jax.random.normal(ks[1], (b, s, kvh, d)),
+        jax.random.normal(ks[2], (b, s, kvh, d)),
+    )
+
+
+class TestAttentionInvariants:
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), cut=st.integers(8, 56))
+    def test_causality(self, seed, cut):
+        """Output at positions < cut must not depend on inputs ≥ cut."""
+        q, k, v = qkv(seed, 1, 64, 4, 2, 16)
+        out1 = attention_reference(q, k, v, causal=True)
+        noise = jax.random.normal(jax.random.PRNGKey(seed + 1), k.shape) * 10
+        mask = (jnp.arange(64) >= cut)[None, :, None, None]
+        k2 = jnp.where(mask, k + noise, k)
+        v2 = jnp.where(mask, v + noise, v)
+        out2 = attention_reference(q, k2, v2, causal=True)
+        np.testing.assert_allclose(
+            np.asarray(out1[:, :cut]), np.asarray(out2[:, :cut]), atol=1e-5
+        )
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), window=st.sampled_from([8, 16, 32]))
+    def test_sliding_window_locality(self, seed, window):
+        """Output at position i depends only on keys in (i−window, i]."""
+        q, k, v = qkv(seed, 1, 64, 2, 2, 16)
+        out1 = attention_reference(q, k, v, causal=True, window=window)
+        i = 50
+        # perturb keys strictly older than the window of position i
+        old = (jnp.arange(64) <= i - window)[None, :, None, None]
+        k2 = jnp.where(old, k * 3 + 1, k)
+        v2 = jnp.where(old, v * 3 + 1, v)
+        out2 = attention_reference(q, k2, v2, causal=True, window=window)
+        np.testing.assert_allclose(
+            np.asarray(out1[:, i]), np.asarray(out2[:, i]), atol=1e-5
+        )
+
+    def test_gqa_equals_repeated_mha(self):
+        """GQA(kv=2) ≡ MHA with the kv heads explicitly repeated."""
+        q, k, v = qkv(0, 2, 32, 8, 2, 16)
+        out_gqa = attention_reference(q, k, v, causal=True)
+        out_mha = attention_reference(q, repeat_kv(k, 8), repeat_kv(v, 8), causal=True)
+        np.testing.assert_allclose(np.asarray(out_gqa), np.asarray(out_mha), atol=1e-6)
+
+    def test_softmax_convexity(self):
+        """Each output row is a convex combination of V rows: bounded by
+        [min(V), max(V)] per head-dim."""
+        q, k, v = qkv(3, 1, 32, 2, 2, 8)
+        out = attention_reference(q, k, v, causal=False)
+        vf = np.asarray(repeat_kv(v, 2))
+        lo = vf.min(axis=1, keepdims=True) - 1e-5
+        hi = vf.max(axis=1, keepdims=True) + 1e-5
+        o = np.asarray(out)
+        assert (o >= lo).all() and (o <= hi).all()
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        qc=st.sampled_from([16, 32]),
+        kc=st.sampled_from([16, 64]),
+        tri=st.booleans(),
+    )
+    def test_flashlike_block_size_invariance(self, seed, qc, kc, tri):
+        """The flash-style result is independent of block sizes/unrolling."""
+        q, k, v = qkv(seed, 1, 64, 2, 1, 16)
+        ref = attention_reference(q, k, v, causal=True)
+        out = attention_flashlike(
+            q, k, v, causal=True, q_chunk=qc, k_chunk=kc, triangular=tri
+        )
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+
+class TestModelInvariants:
+    def test_lm_causality_end_to_end(self):
+        """Full decoder: logits at position i unchanged by future tokens."""
+        cfg = get_config("qwen3-1.7b", reduced=True)
+        params = zoo.init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+        t1 = jax.random.randint(jax.random.PRNGKey(1), (1, 32), 0, cfg.vocab_size)
+        t2 = t1.at[:, 20:].set((t1[:, 20:] + 7) % cfg.vocab_size)
+
+        def logits(tokens):
+            x = decoder.embed_inputs(params, {"tokens": tokens}, cfg)
+            h, _ = decoder.forward_hidden(params, x, cfg)
+            return decoder.logits_at(params, h, cfg)
+
+        l1, l2 = logits(t1), logits(t2)
+        np.testing.assert_allclose(
+            np.asarray(l1[:, :20]), np.asarray(l2[:, :20]), atol=1e-4
+        )
+
+    def test_ssm_causality_end_to_end(self):
+        """Mamba-2 stack is causal too (scan direction)."""
+        cfg = get_config("mamba2-370m", reduced=True)
+        params = zoo.init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+        t1 = jax.random.randint(jax.random.PRNGKey(1), (1, 32), 0, cfg.vocab_size)
+        t2 = t1.at[:, 20:].set((t1[:, 20:] + 7) % cfg.vocab_size)
+
+        def logits(tokens):
+            x = decoder.embed_inputs(params, {"tokens": tokens}, cfg)
+            h, _ = decoder.forward_hidden(params, x, cfg)
+            return decoder.logits_at(params, h, cfg)
+
+        l1, l2 = logits(t1), logits(t2)
+        np.testing.assert_allclose(
+            np.asarray(l1[:, :20]), np.asarray(l2[:, :20]), atol=1e-4
+        )
+
+    def test_encoder_is_not_causal(self):
+        """hubert must be bidirectional: early outputs DO change."""
+        cfg = get_config("hubert-xlarge", reduced=True)
+        params = zoo.init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+        f = jax.random.normal(jax.random.PRNGKey(1), (1, 32, cfg.frontend_dim))
+        f2 = f.at[:, 20:].add(5.0)
+        l1 = zoo.encode_fn(params, {"features": f}, cfg)
+        l2 = zoo.encode_fn(params, {"features": f2}, cfg)
+        assert float(jnp.max(jnp.abs(l1[:, :20] - l2[:, :20]))) > 1e-3
+
+
+class TestMoERouting:
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), k=st.integers(1, 4))
+    def test_routing_weights_normalized(self, seed, k):
+        from repro.models.moe import route
+
+        xt = jax.random.normal(jax.random.PRNGKey(seed), (32, 16))
+        router = jax.random.normal(jax.random.PRNGKey(seed + 1), (16, 8)) * 0.1
+        w, ids, aux = route(xt, router, k)
+        np.testing.assert_allclose(np.asarray(w.sum(-1)), 1.0, atol=1e-6)
+        assert int(ids.max()) < 8 and int(ids.min()) >= 0
+        # per-token expert ids are distinct (top-k without replacement)
+        for row in np.asarray(ids):
+            assert len(set(row.tolist())) == k
+        assert float(aux) >= 1.0 - 1e-6   # E·Σf·p ≥ 1 (uniform lower bound)
+
+    def test_capacity_drop_monotone(self):
+        """Lower capacity factor ⇒ no more routed mass (drops only)."""
+        from repro.models.moe import _capacity
+
+        assert _capacity(1024, 8, 2, 2.0) >= _capacity(1024, 8, 2, 1.0)
+        assert _capacity(1024, 8, 2, 1.0) >= 8

@@ -1,0 +1,94 @@
+"""Experiment 3 reproduction: idle power-saving methods (Table 3, Figs 10-11)."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    CALIBRATED_POWERUP_OVERHEAD_MJ as CAL,
+    FLASH_POWER_MW,
+    IDLE_POWER_MW,
+    IdlePowerMethod,
+    crossover_period_ms,
+    idle_power_saving_pct,
+    idlewait_n_max,
+    onoff_n_max,
+    paper_lstm_item,
+)
+
+
+@pytest.fixture(scope="module")
+def item():
+    return paper_lstm_item()
+
+
+def rel_err(a, b):
+    return abs(a - b) / abs(b)
+
+
+class TestTable3:
+    def test_idle_powers(self):
+        assert IDLE_POWER_MW[IdlePowerMethod.BASELINE] == 134.3
+        assert IDLE_POWER_MW[IdlePowerMethod.METHOD1] == 34.2
+        assert IDLE_POWER_MW[IdlePowerMethod.METHOD1_2] == 24.0
+
+    def test_saving_percentages(self):
+        # paper: 74.38% and 81.98% (we allow 0.3pp: the paper's own table is
+        # internally rounded — (134.3−34.2)/134.3 = 74.53%)
+        assert abs(idle_power_saving_pct(IdlePowerMethod.METHOD1) - 74.38) < 0.3
+        assert abs(idle_power_saving_pct(IdlePowerMethod.METHOD1_2) - 81.98) < 0.3
+
+    def test_flash_floor_below_all_idle_powers(self):
+        # paper §5.4: flash draws a constant ~15.2 mW folded into every figure
+        for p in IDLE_POWER_MW.values():
+            assert p > FLASH_POWER_MW
+
+
+class TestFig10Fig11:
+    def test_method1_items_3_92x(self, item):
+        # paper: Method 1 → 3.92× the Baseline workload items (at 40 ms)
+        base = idlewait_n_max(item, 40.0, powerup_overhead_mj=CAL)
+        m1 = idlewait_n_max(item, 40.0, idle_power_mw=34.2, powerup_overhead_mj=CAL)
+        assert rel_err(m1 / base, 3.92) < 5e-3
+
+    def test_method12_items_5_57x(self, item):
+        # paper: Methods 1+2 → 5.57× the Baseline workload items (at 40 ms)
+        base = idlewait_n_max(item, 40.0, powerup_overhead_mj=CAL)
+        m12 = idlewait_n_max(item, 40.0, idle_power_mw=24.0, powerup_overhead_mj=CAL)
+        assert rel_err(m12 / base, 5.57) < 5e-3
+
+    def test_method12_vs_onoff_12_39x(self, item):
+        # abstract/conclusion: 12.39× more items than On-Off at 40 ms
+        n_oo = onoff_n_max(item, powerup_overhead_mj=CAL)
+        m12 = idlewait_n_max(item, 40.0, idle_power_mw=24.0, powerup_overhead_mj=CAL)
+        assert rel_err(m12 / n_oo, 12.39) < 5e-3
+
+    def test_method1_avg_lifetime_33_64h(self, item):
+        ts = np.arange(10.0, 120.01, 10.0)
+        hours = [
+            idlewait_n_max(item, float(t), idle_power_mw=34.2, powerup_overhead_mj=CAL)
+            * t
+            / 3.6e6
+            for t in ts
+        ]
+        assert rel_err(float(np.mean(hours)), 33.64) < 5e-3
+
+    def test_method12_avg_lifetime_47_80h(self, item):
+        ts = np.arange(10.0, 120.01, 10.0)
+        hours = [
+            idlewait_n_max(item, float(t), idle_power_mw=24.0, powerup_overhead_mj=CAL)
+            * t
+            / 3.6e6
+            for t in ts
+        ]
+        assert rel_err(float(np.mean(hours)), 47.80) < 5e-3
+
+    def test_crossover_extended_to_499ms(self, item):
+        # paper: beneficial request period extended from 89.21 to 499.06 ms
+        cross = crossover_period_ms(item, idle_power_mw=24.0, powerup_overhead_mj=CAL)
+        assert rel_err(cross, 499.06) < 1e-3
+
+    def test_lower_idle_power_monotonically_extends_crossover(self, item):
+        crossings = [
+            crossover_period_ms(item, idle_power_mw=p, powerup_overhead_mj=CAL)
+            for p in (134.3, 34.2, 24.0)
+        ]
+        assert crossings[0] < crossings[1] < crossings[2]

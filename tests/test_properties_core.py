@@ -1,0 +1,166 @@
+"""Hypothesis property tests on the energy-model invariants.
+
+These test the *system's* invariants over randomized workload items and
+budgets — not just the paper's point values.
+"""
+import math
+
+import pytest
+from hypothesis import assume, given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    ConfigParams,
+    ExperimentSpec,
+    SPARTAN7_XC7S15,
+    SPI_BUSWIDTHS,
+    SPI_CLOCKS_MHZ,
+    WorkloadItem,
+    WorkloadSpec,
+    crossover_period_ms,
+    simulate,
+)
+from repro.core import energy_model as em
+from repro.core.phases import (
+    CONFIGURATION,
+    DATA_LOADING,
+    DATA_OFFLOADING,
+    INFERENCE,
+    Phase,
+)
+
+# ---------------------------------------------------------------------------
+# strategies for random workload items
+# ---------------------------------------------------------------------------
+power = st.floats(min_value=1.0, max_value=2000.0, allow_nan=False)
+short_t = st.floats(min_value=1e-4, max_value=5.0, allow_nan=False)
+cfg_t = st.floats(min_value=0.5, max_value=100.0, allow_nan=False)
+idle_p = st.floats(min_value=0.1, max_value=500.0, allow_nan=False)
+
+
+@st.composite
+def items(draw):
+    return WorkloadItem(
+        name="random",
+        phases=(
+            Phase(CONFIGURATION, draw(power), draw(cfg_t)),
+            Phase(DATA_LOADING, draw(power), draw(short_t)),
+            Phase(INFERENCE, draw(power), draw(short_t)),
+            Phase(DATA_OFFLOADING, draw(power), draw(short_t)),
+        ),
+        idle_power_mw=draw(idle_p),
+    )
+
+
+budgets = st.floats(min_value=10.0, max_value=1e7)  # mJ
+
+
+@given(items(), budgets)
+def test_nmax_maximality_onoff(item, budget):
+    n = em.onoff_n_max(item, budget)
+    assert em.onoff_cumulative_energy_mj(item, n) <= budget * (1 + 1e-9)
+    assert em.onoff_cumulative_energy_mj(item, n + 1) > budget
+
+
+@given(items(), budgets, st.floats(min_value=0.0, max_value=200.0))
+def test_nmax_maximality_idlewait(item, budget, slack_ms):
+    t_req = item.execution_time_ms + slack_ms
+    n = em.idlewait_n_max(item, t_req, budget)
+    assert n >= 0
+    assert em.idlewait_cumulative_energy_mj(item, n, t_req) <= budget * (1 + 1e-9)
+    if n > 0:
+        # fp64 rounding slack: at n ~ 1e7 items the cumulative sum can land
+        # exactly on the budget boundary
+        assert em.idlewait_cumulative_energy_mj(item, n + 1, t_req) > budget * (
+            1 - 1e-9
+        ) - 1e-9
+
+
+@given(items(), st.floats(min_value=0.01, max_value=200.0))
+def test_idlewait_items_decrease_with_period(item, slack_ms):
+    """More idle time per period ⇒ never more items (monotonicity)."""
+    t1 = item.execution_time_ms + slack_ms
+    t2 = t1 + 1.0
+    n1 = em.idlewait_n_max(item, t1, 1e6)
+    n2 = em.idlewait_n_max(item, t2, 1e6)
+    assert n2 <= n1
+
+
+@given(items())
+def test_crossover_separates_strategies(item):
+    """At T_req below the cross point IW's marginal energy is lower; above,
+    higher — the defining property of the paper's cross point."""
+    cross = crossover_period_ms(item)
+    assume(math.isfinite(cross) and cross > item.execution_time_ms + 1e-6)
+    e_onoff = em.onoff_item_energy_mj(item)
+
+    def iw_marginal(t):
+        return em.idlewait_item_energy_mj(item) + em.idle_energy_mj(item, t)
+
+    below = max(item.execution_time_ms, cross * 0.9)
+    if below < cross:
+        assert iw_marginal(below) <= e_onoff * (1 + 1e-9)
+    assert iw_marginal(cross * 1.1) >= e_onoff * (1 - 1e-9)
+
+
+@given(items(), st.floats(min_value=0.1, max_value=100.0))
+def test_energy_budget_never_exceeded_sim(item, budget_j):
+    t_req = item.total_time_ms + 1.0
+    for kind in ("on_off", "idle_waiting"):
+        spec = ExperimentSpec(
+            workload=WorkloadSpec(budget_j, t_req), item=item, strategy_kind=kind
+        )
+        res = simulate(spec, mode="fast")
+        assert res.energy_used_mj <= res.energy_budget_mj * (1 + 1e-9)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    items(),
+    st.integers(min_value=0, max_value=2000),
+    st.floats(min_value=0.0, max_value=1.0),
+)
+def test_sim_step_equals_fast(item, n_target, frac):
+    """Step-mode (event loop) and fast-mode (closed form) agree on n_max,
+    including exactly at admission boundaries (frac≈0 ⇒ budget lands on the
+    cumulative energy of item n_target)."""
+    t_req = item.total_time_ms + 1.0
+    for kind in ("on_off", "idle_waiting"):
+        if kind == "on_off":
+            per = em.onoff_item_energy_mj(item)
+            budget_mj = n_target * per + frac * per
+        else:
+            per = em.idlewait_item_energy_mj(item) + em.idle_energy_mj(item, t_req)
+            budget_mj = em.idlewait_init_energy_mj(item) + n_target * per + frac * per
+        spec = ExperimentSpec(
+            workload=WorkloadSpec(budget_mj / 1000.0, t_req), item=item, strategy_kind=kind
+        )
+        fast = simulate(spec, "fast")
+        step = simulate(spec, "step")
+        assert fast.n_items == step.n_items
+        assert abs(fast.n_items - n_target) <= 1  # budget was built for ~n_target
+
+
+@given(
+    st.sampled_from(SPI_BUSWIDTHS),
+    st.sampled_from(SPI_CLOCKS_MHZ),
+    st.booleans(),
+)
+def test_config_energy_bounded_by_anchors(w, f, c):
+    """Every point in the parameter space lies between the calibrated
+    best/worst anchors (no pathological interpolation)."""
+    dev = SPARTAN7_XC7S15
+    e = dev.config_energy_mj(ConfigParams(w, f, c))
+    assert 11.85 * (1 - 5e-3) <= e <= 475.57
+
+
+@given(items())
+def test_idle_energy_alone_within_budget(item):
+    """The idle-power wall the paper's Fig. 9 plateau reflects: the idle
+    gaps alone ((n−1)·E_idle) can never exceed the budget."""
+    budget = 1e6
+    t_req = item.execution_time_ms + 50.0
+    n = em.idlewait_n_max(item, t_req, budget)
+    if n > 0:
+        e_idle = em.idle_energy_mj(item, t_req)
+        assert (n - 1) * e_idle <= budget * (1 + 1e-9)

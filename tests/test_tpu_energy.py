@@ -1,0 +1,71 @@
+"""TPU adaptation of the paper's energy analysis (core/tpu_energy.py)."""
+import math
+
+import pytest
+
+from repro.core import tpu_energy as te
+from repro.core.phases import WorkloadItem
+
+
+@pytest.fixture
+def cell():
+    # qwen3-32b-ish serving cell: 65.5 GB of bf16 weights on 256 chips
+    return te.TpuCell(
+        arch="qwen3-32b", chips=256, param_bytes=65.5e9, infer_time_ms=25.0
+    )
+
+
+class TestConfigPhase:
+    def test_structure_mirrors_paper(self, cell):
+        """Faster lanes/links and compression shrink bring-up energy, with
+        the Setup floor irreducible — the paper's Exp-1 structure."""
+        worst = cell.config_energy_mj(te.TPU_WORST)
+        best = cell.config_energy_mj(te.TPU_BEST)
+        assert best < worst
+        floor = te.SETUP_POWER_W * 1000 * cell.chips * te.SETUP_TIME_MS / 1000
+        assert best > floor
+
+    def test_sweep_is_exhaustive(self, cell):
+        sweep = te.sweep_config_space(cell)
+        assert len(sweep) == len(te.DMA_LANES) * len(te.LINK_TIERS) * len(te.COMPRESSION)
+
+    def test_compression_always_helps_energy(self, cell):
+        for lanes in te.DMA_LANES:
+            for tier in te.LINK_TIERS:
+                e_raw = cell.config_energy_mj(te.TpuConfigParams(lanes, tier, "none"))
+                e_int8 = cell.config_energy_mj(
+                    te.TpuConfigParams(lanes, tier, "zstd+int8")
+                )
+                assert e_int8 < e_raw
+
+    def test_load_time_scales_inversely_with_lanes(self, cell):
+        t1 = cell.load_time_ms(te.TpuConfigParams(1, 1.0, "none"))
+        t4 = cell.load_time_ms(te.TpuConfigParams(4, 1.0, "none"))
+        assert t1 / t4 == pytest.approx(4.0)
+
+
+class TestCrossover:
+    def test_workload_item_units(self, cell):
+        item = cell.workload_item(te.TPU_BEST)
+        assert isinstance(item, WorkloadItem)
+        assert item.config_energy_mj > 0
+        assert item.idle_power_mw == te.P_IDLE_BASELINE_W * 1000 * cell.chips
+
+    def test_crossover_finite_and_positive(self, cell):
+        cross = te.crossover_ms(cell)
+        assert math.isfinite(cross) and cross > cell.infer_time_ms
+
+    def test_idle_tiers_extend_crossover(self, cell):
+        """Methods 1 / 1+2 extend the beneficial period — paper Exp. 3."""
+        base = te.crossover_ms(cell, idle_tier="baseline")
+        m1 = te.crossover_ms(cell, idle_tier="method1")
+        m12 = te.crossover_ms(cell, idle_tier="method1+2")
+        assert base < m1 < m12
+
+    def test_bigger_models_cross_later(self, cell):
+        """More weight bytes ⇒ costlier bring-up ⇒ Idle-Waiting wins over a
+        wider period range (the pod-scale version of the paper's insight)."""
+        import dataclasses
+
+        big = dataclasses.replace(cell, param_bytes=cell.param_bytes * 6)
+        assert te.crossover_ms(big) > te.crossover_ms(cell)
