@@ -1,0 +1,150 @@
+"""Adaptive power policy vs the static strategies on realistic arrivals.
+
+Sweeps arrival processes (deterministic at several periods, Poisson, and a
+bursty MMPP trace) × policies (On-Off, Idle-Waiting with methods 1+2, and
+the adaptive controller) with the paper's Table-2 workload item.  The
+headline row: on the bursty trace the adaptive controller serves MORE items
+from the same budget than EITHER static strategy — the paper's crossover
+made actionable at runtime.
+
+Invoke via ``python -m benchmarks.run --only adaptive`` (CSV rows) or
+``python -m benchmarks.bench_adaptive`` (full JSON, one record per
+process × policy — see docs/benchmarks.md for the field glossary).
+"""
+from __future__ import annotations
+
+import json
+import time
+
+from repro.core import energy_model as em
+from repro.core.adaptive import PolicyController, StaticPolicy
+from repro.core.arrivals import (
+    ArrivalProcess,
+    DeterministicArrivals,
+    MMPPArrivals,
+    PoissonArrivals,
+)
+from repro.core.phases import paper_lstm_item
+from repro.core.simulator import simulate_trace
+from repro.core.strategies import IdlePowerMethod
+
+#: Small budget (J → mJ) so event-loop sweeps stay fast; ratios are
+#: budget-independent once n ≫ 1.
+BUDGET_MJ = 20_000.0
+N_ARRIVALS = 200_000
+METHOD = IdlePowerMethod.METHOD1_2
+OVERHEAD = em.CALIBRATED_POWERUP_OVERHEAD_MJ
+
+
+def processes() -> list[ArrivalProcess]:
+    return [
+        DeterministicArrivals(40.0),          # paper's headline period (IW wins)
+        DeterministicArrivals(200.0),         # below crossover (IW wins)
+        DeterministicArrivals(2000.0),        # above crossover (On-Off wins)
+        PoissonArrivals(200.0),               # memoryless, mean below crossover
+        MMPPArrivals(burst_ms=50.0, quiet_ms=5000.0,
+                     mean_burst_len=8, mean_quiet_len=1),   # bursty
+    ]
+
+
+def _policies(item):
+    return {
+        "on_off": lambda: StaticPolicy(
+            "on_off", item, method=METHOD, powerup_overhead_mj=OVERHEAD
+        ),
+        "idle_waiting": lambda: StaticPolicy(
+            "idle_waiting", item, method=METHOD, powerup_overhead_mj=OVERHEAD
+        ),
+        "adaptive": lambda: PolicyController(
+            item, method=METHOD, powerup_overhead_mj=OVERHEAD
+        ),
+    }
+
+
+def _label(p: ArrivalProcess) -> str:
+    if isinstance(p, DeterministicArrivals):
+        return f"deterministic_{p.period_ms:.0f}ms"
+    if isinstance(p, PoissonArrivals):
+        return f"poisson_{p.mean_ms:.0f}ms"
+    return p.name
+
+
+_SWEEP_CACHE: dict[int, list] = {}
+
+
+def sweep(seed: int = 1) -> list[dict]:
+    """One record per process × policy (the JSON payload).  Memoized per
+    seed: `rows()` and `run.py --json` share one computation."""
+    if seed in _SWEEP_CACHE:
+        return _SWEEP_CACHE[seed]
+    item = paper_lstm_item()
+    out = []
+    for proc in processes():
+        arrivals = proc.arrival_times(N_ARRIVALS, seed)
+        for policy_name, make in _policies(item).items():
+            res = simulate_trace(
+                item, arrivals, make(), BUDGET_MJ, OVERHEAD,
+                policy_name=policy_name,
+            )
+            out.append(
+                {
+                    "process": _label(proc),
+                    "mean_period_ms": proc.mean_period_ms(),
+                    "policy": policy_name,
+                    "n_items": res.n_items,
+                    "lifetime_ms": res.lifetime_ms,
+                    "energy_used_mj": res.energy_used_mj,
+                    "energy_per_item_mj": res.energy_per_item_mj,
+                    "configurations": res.configurations,
+                    "releases": res.releases,
+                    "budget_exhausted": res.exhausted,
+                }
+            )
+    _SWEEP_CACHE[seed] = out
+    return out
+
+
+def rows() -> list[tuple[str, float, str]]:
+    t0 = time.perf_counter()
+    records = sweep()
+    us = (time.perf_counter() - t0) * 1e6 / max(len(records), 1)
+    by_proc: dict[str, dict[str, int]] = {}
+    for r in records:
+        by_proc.setdefault(r["process"], {})[r["policy"]] = r["n_items"]
+    out = []
+    for proc, n in by_proc.items():
+        best_static = max(n["on_off"], n["idle_waiting"])
+        out.append(
+            (
+                f"adaptive_{proc}",
+                us,
+                f"onoff={n['on_off']} iw={n['idle_waiting']} "
+                f"adaptive={n['adaptive']} "
+                f"adaptive_vs_best_static={n['adaptive'] / best_static:.3f}",
+            )
+        )
+    # the tentpole claim, as an explicit pass/fail row
+    mm = by_proc["mmpp"]
+    wins = mm["adaptive"] > max(mm["on_off"], mm["idle_waiting"])
+    out.append(
+        ("adaptive_beats_both_statics_on_bursty", us, f"{'PASS' if wins else 'FAIL'}")
+    )
+    return out
+
+
+def print_table() -> None:
+    records = sweep()
+    print("process                policy        n_items  e/item(mJ)  configs")
+    for r in records:
+        print(
+            f"{r['process']:22s} {r['policy']:12s} {r['n_items']:8d} "
+            f"{r['energy_per_item_mj']:10.4f} {r['configurations']:8d}"
+        )
+
+
+def main() -> None:
+    print(json.dumps(sweep(), indent=2))
+
+
+if __name__ == "__main__":
+    main()

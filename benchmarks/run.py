@@ -7,10 +7,16 @@ CSV benches (one per paper table/figure + framework substrates):
     exp3_power_saving     Table 3, Figs 10-11  idle power-saving methods
     roofline              deliverable g     40-cell roofline terms
     tpu_duty_cycle        beyond paper      per-cell bring-up + crossover
+    adaptive              beyond paper      adaptive policy vs statics on
+                                            realistic arrival processes
     kernels               deliverable c/d   kernel micro-benches
     checkpoint            DESIGN §3         compression-mode sweep
+
+``--json PATH`` additionally dumps each bench's structured records (for the
+benches that provide them) to a JSON file — see docs/benchmarks.md.
 """
 import argparse
+import json
 import sys
 import traceback
 
@@ -19,9 +25,20 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--tables", action="store_true", help="print full tables")
     ap.add_argument("--only", default=None, help="substring filter")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="dump structured per-bench records to a JSON file")
     args = ap.parse_args()
 
+    if args.json:
+        # fail fast on an unwritable destination, not after minutes of benches
+        try:
+            with open(args.json, "a"):
+                pass
+        except OSError as e:
+            ap.error(f"--json {args.json}: {e}")
+
     from benchmarks import (
+        bench_adaptive,
         bench_checkpoint,
         bench_config_sweep,
         bench_irregular,
@@ -40,6 +57,7 @@ def main() -> None:
         bench_roofline,
         bench_tpu_duty_cycle,
         bench_irregular,
+        bench_adaptive,
         bench_kernels,
         bench_multi_tenant,
         bench_checkpoint,
@@ -47,6 +65,7 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     failures = 0
+    records: dict[str, list] = {}
     for mod in modules:
         name = mod.__name__.split(".")[-1]
         if args.only and args.only not in name:
@@ -54,10 +73,18 @@ def main() -> None:
         try:
             for row in mod.rows():
                 print(f"{row[0]},{row[1]:.1f},{row[2]}")
+            if args.json and hasattr(mod, "sweep"):
+                records[name] = mod.sweep()
         except Exception:  # noqa: BLE001
             failures += 1
             print(f"{name},nan,ERROR", file=sys.stderr)
             traceback.print_exc()
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(records, f, indent=2)
+        print(f"wrote {sum(len(v) for v in records.values())} records to "
+              f"{args.json}", file=sys.stderr)
 
     if args.tables:
         print()

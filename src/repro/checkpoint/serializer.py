@@ -18,18 +18,61 @@ path — restoring onto a different mesh/pod count (elastic re-mesh) is just
 from __future__ import annotations
 
 import io
+import zlib
 from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:  # optional: stdlib zlib is the fallback codec when zstandard is absent
+    import zstandard
+except ImportError:  # pragma: no cover - exercised on minimal containers
+    zstandard = None
 
 from repro.kernels.dequant import ops as dq
 
 MODES = ("none", "zstd", "zstd+int8")
 _QUANT_GROUP = 128
+
+#: Compression backend actually used for the "zstd" modes.  ``zstandard`` is
+#: an optional extra (see pyproject.toml); a clean container falls back to
+#: stdlib zlib so checkpoints still round-trip (the blob records its codec).
+HAVE_ZSTD = zstandard is not None
+
+
+class _ZlibCompressor:
+    def __init__(self, level: int = 6):
+        self.level = level
+
+    def compress(self, data: bytes) -> bytes:
+        return zlib.compress(data, self.level)
+
+
+class _ZlibDecompressor:
+    def decompress(self, data: bytes) -> bytes:
+        return zlib.decompress(data)
+
+
+def _compressor(level: int):
+    if HAVE_ZSTD:
+        return "zstd", zstandard.ZstdCompressor(level=level)
+    return "zlib", _ZlibCompressor()
+
+
+def _decompressor(codec: str):
+    if codec == "zstd":
+        if not HAVE_ZSTD:
+            raise ModuleNotFoundError(
+                "checkpoint was written with the zstd codec but the "
+                "'zstandard' package is not installed (pip install "
+                "'repro[zstd]' or zstandard)"
+            )
+        return zstandard.ZstdDecompressor()
+    if codec == "zlib":
+        return _ZlibDecompressor()
+    raise ValueError(f"unknown checkpoint codec {codec!r}")
 
 
 def _path_str(path) -> str:
@@ -51,7 +94,7 @@ def serialize(tree: Any, mode: str = "zstd", level: int = 3) -> bytes:
     """Pytree of arrays → bytes."""
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}")
-    cctx = zstandard.ZstdCompressor(level=level)
+    codec, cctx = _compressor(level)
     leaves = []
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     for path, leaf in flat:
@@ -79,6 +122,7 @@ def serialize(tree: Any, mode: str = "zstd", level: int = 3) -> bytes:
     payload = {
         "version": 1,
         "mode": mode,
+        "codec": codec,
         "leaves": leaves,
     }
     return msgpack.packb(payload, use_bin_type=True)
@@ -89,8 +133,9 @@ def deserialize(data: bytes, target: Any = None) -> Any:
     structure) is given, leaves are restored into its structure; else a flat
     {path: array} dict is returned."""
     payload = msgpack.unpackb(data, raw=False)
-    dctx = zstandard.ZstdDecompressor()
     mode = payload["mode"]
+    # blobs predating the codec field were always zstd-compressed
+    dctx = _decompressor(payload.get("codec", "zstd")) if mode != "none" else None
     by_path: dict[str, np.ndarray] = {}
     for record in payload["leaves"]:
         shape = tuple(record["shape"])

@@ -1,0 +1,58 @@
+"""Version compatibility shims for the jax API surface this repo targets.
+
+The codebase is written against the modern jax API (``jax.shard_map``,
+``AbstractMesh(axis_sizes, axis_names)``); older releases (≤0.4.x) expose
+the same functionality under different names/signatures.  Everything that
+is version-sensitive goes through this module so the rest of the code (and
+the tests) stays version-agnostic.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+
+
+def shard_map(
+    f,
+    mesh,
+    in_specs,
+    out_specs,
+    check_vma: bool = True,
+    axis_names: Optional[frozenset] = None,
+):
+    """``jax.shard_map`` with graceful fallback to the 0.4.x experimental API.
+
+    ``check_vma`` maps onto the old ``check_rep``; ``axis_names`` (the set of
+    mesh axes the body is *manual* over) maps onto the old ``auto`` set (its
+    complement).
+    """
+    if hasattr(jax, "shard_map"):
+        kwargs: dict[str, Any] = {"check_vma": check_vma}
+        if axis_names is not None:
+            kwargs["axis_names"] = axis_names
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    kwargs = {"check_rep": check_vma}
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+        if auto:
+            kwargs["auto"] = auto
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs
+    )
+
+
+def abstract_mesh(axis_sizes: tuple, axis_names: tuple):
+    """``jax.sharding.AbstractMesh`` across the signature change.
+
+    New jax: ``AbstractMesh(axis_sizes, axis_names)``;
+    old jax: ``AbstractMesh(tuple(zip(axis_names, axis_sizes)))``.
+    """
+    try:
+        return jax.sharding.AbstractMesh(tuple(axis_sizes), tuple(axis_names))
+    except TypeError:
+        return jax.sharding.AbstractMesh(tuple(zip(axis_names, axis_sizes)))

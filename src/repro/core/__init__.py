@@ -5,7 +5,10 @@
 - energy_model   : analytical model, Eqs. 1-4 (§4.3)
 - strategies     : On-Off vs Idle-Waiting + power-saving methods (Exp. 2-3)
 - workload       : YAML workload/item descriptions (§5.1)
-- simulator      : discrete-event duty-cycle simulator (§5.1)
+- simulator      : discrete-event duty-cycle simulator (§5.1) + trace replay
+- arrivals       : request-arrival processes (deterministic/Poisson/MMPP/trace)
+- adaptive       : adaptive power policy (crossover decision rule + online
+                   controller with hysteresis-guarded ski-rental hybrid)
 - tpu_energy     : TPU-pod adaptation of the phase/energy model (DESIGN.md §3)
 - duty_cycle     : runnable duty-cycle controller for the serving engine
 """
@@ -66,6 +69,26 @@ from repro.core.workload import (
     WorkloadSpec,
     paper_experiment,
 )
-from repro.core.simulator import SimEvent, SimResult, simulate
+from repro.core.simulator import (
+    SimEvent,
+    SimResult,
+    TraceSimResult,
+    simulate,
+    simulate_trace,
+)
+from repro.core.arrivals import (
+    ArrivalProcess,
+    DeterministicArrivals,
+    MMPPArrivals,
+    PoissonArrivals,
+    TraceArrivals,
+    make_process,
+)
+from repro.core.adaptive import (
+    AdaptiveStrategy,
+    PolicyController,
+    StaticPolicy,
+    break_even_timeout_ms,
+)
 
 __all__ = [k for k in dir() if not k.startswith("_")]

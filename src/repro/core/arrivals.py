@@ -1,0 +1,198 @@
+"""Request-arrival processes for duty-cycle workloads (paper §7 future work).
+
+The paper evaluates a *constant* request period; its stated future work is
+irregular arrivals.  This module generates realistic request streams that
+both the discrete-event simulator (:func:`repro.core.simulator.simulate_trace`)
+and the live serving layer (:mod:`repro.serving.scheduler`) consume:
+
+* :class:`DeterministicArrivals` — the paper's duty-cycle mode (period T);
+* :class:`PoissonArrivals`       — memoryless traffic at a mean period;
+* :class:`MMPPArrivals`          — 2-state Markov-modulated Poisson process:
+  bursts of fast requests separated by long quiet stretches (event-triggered
+  sensors, diurnal tenants);
+* :class:`TraceArrivals`         — replay of a recorded trace (one
+  inter-arrival gap in ms per line; ``#`` comments allowed).
+
+All processes are seeded and deterministic: the same ``(process, n, seed)``
+triple always yields the same stream.  Times are milliseconds, matching
+:mod:`repro.core.phases`; the first request arrives at t = 0.
+"""
+from __future__ import annotations
+
+import dataclasses
+import io
+import math
+from typing import Sequence, Union
+
+import numpy as np
+
+
+class ArrivalProcess:
+    """Base interface: a generator of inter-arrival gaps (ms)."""
+
+    name: str = "abstract"
+
+    def inter_arrival_times(self, n: int, seed: int = 0) -> np.ndarray:
+        """``n`` inter-arrival gaps (ms), gap i separating request i from
+        request i+1."""
+        raise NotImplementedError
+
+    def arrival_times(self, n: int, seed: int = 0) -> np.ndarray:
+        """``n`` absolute arrival times (ms), the first at exactly 0.0."""
+        if n <= 0:
+            return np.zeros((0,), dtype=np.float64)
+        gaps = np.asarray(self.inter_arrival_times(n - 1, seed), np.float64)
+        return np.concatenate([[0.0], np.cumsum(gaps)])
+
+    def mean_period_ms(self) -> float:
+        """Expected inter-arrival gap (ms)."""
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class DeterministicArrivals(ArrivalProcess):
+    """Constant request period — the paper's duty-cycle mode."""
+
+    period_ms: float
+    name: str = "deterministic"
+
+    def __post_init__(self):
+        if self.period_ms <= 0:
+            raise ValueError(f"period must be positive, got {self.period_ms}")
+
+    def inter_arrival_times(self, n: int, seed: int = 0) -> np.ndarray:
+        return np.full((n,), self.period_ms, dtype=np.float64)
+
+    def mean_period_ms(self) -> float:
+        return self.period_ms
+
+
+@dataclasses.dataclass(frozen=True)
+class PoissonArrivals(ArrivalProcess):
+    """Memoryless arrivals: exponential gaps with the given mean."""
+
+    mean_ms: float
+    name: str = "poisson"
+
+    def __post_init__(self):
+        if self.mean_ms <= 0:
+            raise ValueError(f"mean period must be positive, got {self.mean_ms}")
+
+    def inter_arrival_times(self, n: int, seed: int = 0) -> np.ndarray:
+        rng = np.random.default_rng(seed)
+        return rng.exponential(self.mean_ms, n)
+
+    def mean_period_ms(self) -> float:
+        return self.mean_ms
+
+
+@dataclasses.dataclass(frozen=True)
+class MMPPArrivals(ArrivalProcess):
+    """2-state Markov-modulated Poisson process (bursty traffic).
+
+    State B (burst): exponential gaps with mean ``burst_ms``;
+    state Q (quiet): exponential gaps with mean ``quiet_ms``.
+    After each arrival the state flips with probability ``1/mean_burst_len``
+    (from B) or ``1/mean_quiet_len`` (from Q) — dwell lengths are geometric,
+    so bursts average ``mean_burst_len`` requests.
+    """
+
+    burst_ms: float
+    quiet_ms: float
+    mean_burst_len: float = 8.0
+    mean_quiet_len: float = 1.0
+    name: str = "mmpp"
+
+    def __post_init__(self):
+        if self.burst_ms <= 0 or self.quiet_ms <= 0:
+            raise ValueError("state mean periods must be positive")
+        if self.mean_burst_len < 1 or self.mean_quiet_len < 1:
+            raise ValueError("mean dwell lengths must be ≥ 1 arrival")
+
+    def inter_arrival_times(self, n: int, seed: int = 0) -> np.ndarray:
+        rng = np.random.default_rng(seed)
+        gaps = np.empty((n,), dtype=np.float64)
+        in_burst = True
+        for i in range(n):
+            mean = self.burst_ms if in_burst else self.quiet_ms
+            gaps[i] = rng.exponential(mean)
+            p_flip = 1.0 / (self.mean_burst_len if in_burst else self.mean_quiet_len)
+            if rng.random() < p_flip:
+                in_burst = not in_burst
+        return gaps
+
+    def mean_period_ms(self) -> float:
+        # stationary fraction of arrivals in each state ∝ mean dwell length
+        b, q = self.mean_burst_len, self.mean_quiet_len
+        return (b * self.burst_ms + q * self.quiet_ms) / (b + q)
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceArrivals(ArrivalProcess):
+    """Replay of a recorded gap trace; cycles if more gaps are requested
+    than recorded."""
+
+    gaps_ms: tuple
+    name: str = "trace"
+
+    def __post_init__(self):
+        if not self.gaps_ms:
+            raise ValueError("trace must contain at least one gap")
+        if any(g < 0 for g in self.gaps_ms):
+            raise ValueError("trace gaps must be non-negative")
+
+    def inter_arrival_times(self, n: int, seed: int = 0) -> np.ndarray:
+        reps = math.ceil(n / len(self.gaps_ms)) if n else 0
+        return np.asarray((self.gaps_ms * reps)[:n], np.float64)
+
+    def mean_period_ms(self) -> float:
+        return float(np.mean(self.gaps_ms))
+
+    # ---- trace files: one inter-arrival gap (ms) per line -------------------
+    @staticmethod
+    def from_file(fp: Union[str, io.IOBase]) -> "TraceArrivals":
+        if isinstance(fp, str):
+            with open(fp) as f:
+                return TraceArrivals.from_file(f)
+        gaps = []
+        for lineno, line in enumerate(fp, start=1):
+            line = line.split("#", 1)[0].strip()
+            if not line:
+                continue
+            try:
+                gaps.append(float(line))
+            except ValueError:
+                name = getattr(fp, "name", "<trace>")
+                raise ValueError(
+                    f"{name}:{lineno}: expected an inter-arrival gap in ms, "
+                    f"got {line!r}"
+                ) from None
+        return TraceArrivals(tuple(gaps))
+
+    def to_file(self, fp: Union[str, io.IOBase]) -> None:
+        if isinstance(fp, str):
+            with open(fp, "w") as f:
+                self.to_file(f)
+            return
+        fp.write("# inter-arrival gaps in ms, one per line\n")
+        for g in self.gaps_ms:
+            fp.write(f"{g!r}\n")
+
+    @staticmethod
+    def record(process: ArrivalProcess, n: int, seed: int = 0) -> "TraceArrivals":
+        """Snapshot another process into a replayable trace."""
+        return TraceArrivals(tuple(process.inter_arrival_times(n, seed).tolist()))
+
+
+def make_process(kind: str, **kwargs) -> ArrivalProcess:
+    """Factory for YAML/CLI-driven experiments."""
+    kinds = {
+        "deterministic": DeterministicArrivals,
+        "poisson": PoissonArrivals,
+        "mmpp": MMPPArrivals,
+        "bursty": MMPPArrivals,
+        "trace": TraceArrivals,
+    }
+    if kind not in kinds:
+        raise ValueError(f"unknown arrival process {kind!r}; choose from {sorted(kinds)}")
+    return kinds[kind](**kwargs)

@@ -21,6 +21,15 @@ Strategies:
                   periods) is provably unbounded-worse on bursty traffic
                   (benchmarks/bench_irregular.py demonstrates it losing to
                   BOTH static strategies).
+    adaptive      `auto` plus regime learning
+                  (:class:`repro.core.adaptive.PolicyController`): the
+                  observed inter-arrival estimate picks pure Idle-Waiting
+                  below the measured crossover and pure On-Off above it,
+                  falling back to the break-even timeout during warmup,
+                  near the crossover (hysteresis band), or on bursty
+                  traffic — so stationary workloads converge to the best
+                  static strategy while irregular ones keep the ski-rental
+                  bound.
 
 The controller records wall-clock per phase and converts to energy via a
 pluggable power model, so the simulator's predictions are checkable against
@@ -32,8 +41,9 @@ import dataclasses
 import time
 from typing import Any, Callable, Optional
 
-from repro.core import energy_model as em
-from repro.core.phases import CONFIGURATION, IDLE, INFERENCE, Phase, WorkloadItem
+from repro.core import adaptive, energy_model as em
+from repro.core.adaptive import PolicyController
+from repro.core.phases import CONFIGURATION, IDLE, INFERENCE, WorkloadItem
 
 
 @dataclasses.dataclass
@@ -71,8 +81,9 @@ class DutyCycleController:
         power: PowerModel,
         strategy: str = "auto",
         clock: Callable[[], float] = time.perf_counter,
+        policy: Optional[PolicyController] = None,
     ):
-        assert strategy in ("on_off", "idle_waiting", "auto")
+        assert strategy in ("on_off", "idle_waiting", "auto", "adaptive")
         self.bring_up_fn = bring_up
         self.infer_fn = infer
         self.release_fn = release
@@ -82,8 +93,12 @@ class DutyCycleController:
         self.handle: Any = None
         self.records: list[PhaseRecord] = []
         self._last_done: Optional[float] = None
+        self._last_arrival: Optional[float] = None
         self._observed_periods: list[float] = []
         self._measured: dict[str, float] = {}   # phase → last wall_s
+        if strategy == "adaptive" and policy is None:
+            policy = PolicyController(idle_power_mw=power.idle_mw)
+        self.policy = policy
 
     # ---- accounting ----
     def _record(self, name: str, t0: float, t1: float) -> None:
@@ -103,15 +118,11 @@ class DutyCycleController:
     def measured_item(self) -> Optional[WorkloadItem]:
         if CONFIGURATION not in self._measured or INFERENCE not in self._measured:
             return None
-        return WorkloadItem(
-            name="measured",
-            phases=(
-                Phase(CONFIGURATION, self.power.config_mw,
-                      self._measured[CONFIGURATION] * 1000.0),
-                Phase(INFERENCE, self.power.infer_mw,
-                      self._measured[INFERENCE] * 1000.0),
-            ),
-            idle_power_mw=self.power.idle_mw,
+        return adaptive.measured_workload_item(
+            "measured",
+            self.power.config_mw, self._measured[CONFIGURATION],
+            self.power.infer_mw, self._measured[INFERENCE],
+            self.power.idle_mw,
         )
 
     def crossover_ms(self) -> Optional[float]:
@@ -121,20 +132,28 @@ class DutyCycleController:
         return em.crossover_period_ms(item)
 
     def timeout_s(self) -> Optional[float]:
-        """Break-even idle timeout T* = E_config / P_idle (ski-rental)."""
+        """Idle timeout before release: break-even T* = E_config / P_idle
+        for `auto` (ski-rental); regime-dependent for `adaptive` (∞ in the
+        Idle-Waiting regime, 0 in the On-Off regime, break-even otherwise).
+        ``None`` = no release scheduled."""
         if CONFIGURATION not in self._measured:
             return None
+        if self.strategy == "adaptive":
+            item = self.measured_item()
+            if item is None:
+                return None
+            return adaptive.controller_timeout_s(self.policy, item)
         e_config_mj = self.power.config_mw * self._measured[CONFIGURATION]
         if self.power.idle_mw <= 0:
             return None
         return e_config_mj / self.power.idle_mw
 
     def maybe_release(self, now: float) -> bool:
-        """auto policy: release if we have idled past the break-even timeout.
-        Returns True if a release happened.  Live schedulers call this
-        during idle gaps (serving/scheduler.py); the energy ledger charges
-        idle power up to the release instant."""
-        if self.strategy != "auto" or self.handle is None:
+        """auto/adaptive policies: release if we have idled past the
+        policy's timeout.  Returns True if a release happened.  Live
+        schedulers call this during idle gaps (serving/scheduler.py); the
+        energy ledger charges idle power up to the release instant."""
+        if self.strategy not in ("auto", "adaptive") or self.handle is None:
             return False
         t = self.timeout_s()
         if t is None or self._last_done is None:
@@ -148,19 +167,30 @@ class DutyCycleController:
         return True
 
     def _decide_release(self) -> bool:
-        """Post-request release decision (static strategies only; `auto`
-        releases via the idle timeout instead)."""
-        return self.strategy == "on_off"
+        """Post-request release decision.  Static `on_off` always releases;
+        `adaptive` releases here too once its regime says On-Off (timeout
+        0) — `auto` and the other adaptive regimes release via the idle
+        timeout instead."""
+        if self.strategy == "on_off":
+            return True
+        return self.strategy == "adaptive" and self.timeout_s() == 0.0
 
     # ---- request path ----
     def submit(self, x: Any) -> Any:
-        if self.strategy == "auto":
+        if self.strategy in ("auto", "adaptive"):
             # retroactive timeout for schedulers that never tick
             self.maybe_release(self.clock())
         now = self.clock()
+        # the submit instant IS the arrival: observe inter-arrival times
+        # directly, unbiased by releases/bring-ups in between (which shift
+        # _last_done but not the arrival clock)
+        if self._last_arrival is not None:
+            period = now - self._last_arrival
+            self._observed_periods.append(period)
+            if self.strategy == "adaptive":
+                self.policy.observe_gap(period * 1000.0)
+        self._last_arrival = now
         if self._last_done is not None:
-            gap = now - self._last_done
-            self._observed_periods.append(gap)
             self._record(IDLE if self.handle is not None else "off",
                          self._last_done, now)
         if self.handle is None:
@@ -177,14 +207,18 @@ class DutyCycleController:
         return out
 
     def next_release_time(self) -> Optional[float]:
-        """Absolute time the auto policy will release, if resident."""
-        if self.strategy != "auto" or self.handle is None or self._last_done is None:
+        """Absolute time the auto/adaptive policy will release, if resident."""
+        if (
+            self.strategy not in ("auto", "adaptive")
+            or self.handle is None
+            or self._last_done is None
+        ):
             return None
         t = self.timeout_s()
         return None if t is None else self._last_done + t
 
     def summary(self) -> dict:
-        return {
+        out = {
             "strategy": self.strategy,
             "requests": sum(1 for r in self.records if r.name == INFERENCE),
             "configurations": sum(1 for r in self.records if r.name == CONFIGURATION),
@@ -193,3 +227,6 @@ class DutyCycleController:
             "crossover_ms": self.crossover_ms(),
             "timeout_s": self.timeout_s(),
         }
+        if self.strategy == "adaptive" and self.policy.item is not None:
+            out["policy"] = self.policy.summary()
+        return out

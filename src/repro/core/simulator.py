@@ -13,11 +13,19 @@ Two execution modes:
 * ``fast`` — exploits the affine structure of cumulative energy to jump
   whole item-periods at once, O(1) per run; bit-identical n_max (used for
   the paper-scale budgets where n_max is in the millions).
+
+:func:`simulate_trace` generalizes the event loop to **arbitrary arrival
+streams** (:mod:`repro.core.arrivals`) and **timeout policies** (static
+On-Off / Idle-Waiting, or the adaptive :class:`~repro.core.adaptive.
+PolicyController`): requests arrive at given times, the policy decides how
+long to stay resident after each one, and energy is charged per phase until
+the budget is exhausted.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator
+import math
+from typing import Iterator, Optional, Sequence
 
 from repro.core import energy_model as em
 from repro.core.phases import CONFIGURATION, IDLE, WorkloadItem
@@ -250,4 +258,137 @@ def _simulate_fast(
         energy_used_mj=used,
         energy_budget_mj=budget,
         energy_by_phase_mj=by_phase,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Trace-driven simulation: arbitrary arrivals × timeout policies
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class TraceSimResult:
+    """Outcome of replaying an arrival trace under a timeout policy."""
+
+    policy: str
+    n_items: int
+    lifetime_ms: float            # completion time of the last served item
+    energy_used_mj: float
+    energy_budget_mj: float
+    energy_by_phase_mj: dict
+    configurations: int           # bring-ups paid (≥1 if anything served)
+    releases: int                 # mid-gap releases the policy triggered
+    exhausted: bool               # budget ran out before the trace ended
+
+    @property
+    def energy_per_item_mj(self) -> float:
+        return self.energy_used_mj / self.n_items if self.n_items else math.inf
+
+
+def simulate_trace(
+    item: WorkloadItem,
+    arrival_times_ms: Sequence[float],
+    policy,
+    e_budget_mj: float = em.PAPER_ENERGY_BUDGET_MJ,
+    powerup_overhead_mj: float = 0.0,
+    policy_name: Optional[str] = None,
+) -> TraceSimResult:
+    """Replay ``arrival_times_ms`` against an energy budget.
+
+    ``policy`` implements the timeout-policy protocol
+    (:class:`~repro.core.adaptive.StaticPolicy`,
+    :class:`~repro.core.adaptive.PolicyController`):
+
+    * ``idle_power_mw``        — accelerator power while idle-resident;
+    * ``idle_timeout_ms()``    — queried after each completion: stay
+      resident this long, then release (``inf`` = never, ``0`` = at once);
+    * ``observe_gap(gap_ms)``  — fed each inter-arrival gap as it is
+      observed (the adaptive controller learns from these).
+
+    Semantics (consistent with Eq. 2/3's admission rule):
+
+    * a request arriving while the accelerator is busy queues (service
+      starts at the previous completion);
+    * serving item *i* is charged its execution phases, the preceding idle
+      span the policy chose, and a (re)configuration if the accelerator was
+      powered off — the item is admitted only if all of that fits the
+      remaining budget;
+    * the first item always pays the initial configuration (E_init).
+    """
+    arrivals = list(arrival_times_ms)
+    name = policy_name or getattr(policy, "kind", type(policy).__name__)
+    budget = e_budget_mj
+    eps = 1e-9
+
+    exec_phases = [p for p in item.phases if p.name != CONFIGURATION]
+    e_exec = item.execution_energy_mj
+    t_exec = item.execution_time_ms
+    e_config = item.config_energy_mj + powerup_overhead_mj
+    t_config = item.config_time_ms
+    p_idle = policy.idle_power_mw
+
+    energy = 0.0
+    by_phase: dict[str, float] = {}
+    n = 0
+    configurations = 0
+    releases = 0
+    resident = False
+    completion = 0.0
+    timeout_ms = math.inf
+    prev_arrival: Optional[float] = None
+    exhausted = False
+
+    def charge(phase: str, mj: float) -> None:
+        nonlocal energy
+        energy += mj
+        by_phase[phase] = by_phase.get(phase, 0.0) + mj
+
+    for a in arrivals:
+        start = max(a, completion)
+        # ---- the gap the policy managed (previous completion → start) ----
+        idle_t = 0.0
+        released_here = False
+        if n > 0 and resident:
+            gap = start - completion
+            idle_t = min(gap, timeout_ms)
+            released_here = timeout_ms < gap
+        idle_e = p_idle * idle_t / 1000.0
+        reconfig = not resident or released_here
+        cost = idle_e + (e_config if reconfig else 0.0) + e_exec
+        if energy + cost > budget + eps * max(1.0, cost):
+            exhausted = True
+            break
+        if idle_e:
+            charge(IDLE, idle_e)
+        if released_here:
+            releases += 1
+            resident = False
+        if reconfig:
+            # The initial bring-up is pre-staged at system start (Eq. 2's
+            # E_init: energy charged, no time against the first period);
+            # re-configurations happen inline and delay service.
+            charge("configuration" if configurations else "initial_configuration",
+                   e_config)
+            if configurations:
+                start += t_config
+            configurations += 1
+        for p in exec_phases:
+            charge(p.name, p.energy_mj)
+        completion = start + t_exec
+        resident = True
+        n += 1
+        # ---- feed the observation, then fix the next gap's timeout -------
+        if prev_arrival is not None:
+            policy.observe_gap(a - prev_arrival)
+        prev_arrival = a
+        timeout_ms = policy.idle_timeout_ms()
+
+    return TraceSimResult(
+        policy=name,
+        n_items=n,
+        lifetime_ms=completion if n else 0.0,
+        energy_used_mj=energy,
+        energy_budget_mj=budget,
+        energy_by_phase_mj=by_phase,
+        configurations=configurations,
+        releases=releases,
+        exhausted=exhausted,
     )

@@ -74,7 +74,7 @@ def main() -> None:
     ap.add_argument("--period-ms", type=float, default=300.0)
     ap.add_argument("--requests", type=int, default=10)
     ap.add_argument("--strategy", default="auto",
-                    choices=["auto", "on_off", "idle_waiting"])
+                    choices=["auto", "adaptive", "on_off", "idle_waiting"])
     args = ap.parse_args()
 
     controller, make_request = build_demo(args.arch, strategy=args.strategy)

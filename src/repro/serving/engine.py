@@ -56,6 +56,11 @@ class ServingEngine:
         self, batch: dict, n_new: int, greedy: bool = True,
         key: Optional[jax.Array] = None,
     ) -> GenerationResult:
+        if self.params is None:
+            raise RuntimeError(
+                "engine was released (powered off); bring up from a "
+                "checkpoint before generating"
+            )
         t0 = time.perf_counter()
         logits, state = self._prefill(self.params, batch)
         logits.block_until_ready()
@@ -76,8 +81,22 @@ class ServingEngine:
             tokens=jnp.stack(outs, axis=1), prefill_s=t1 - t0, decode_s=t2 - t1
         )
 
+    @property
+    def resident(self) -> bool:
+        """Whether weights are on device (idle-waiting) or dropped (off)."""
+        return self.params is not None
+
+    def param_bytes(self) -> int:
+        """Resident footprint — feeds multi-tenant HBM budgeting
+        (:class:`repro.serving.multi_tenant.Tenant.hbm_gb`)."""
+        if self.params is None:
+            return 0
+        return sum(leaf.nbytes for leaf in jax.tree.leaves(self.params))
+
     def release(self) -> None:
         """Drop device buffers (the On-Off 'power-off')."""
+        if self.params is None:
+            return
         for leaf in jax.tree.leaves(self.params):
             if hasattr(leaf, "delete"):
                 leaf.delete()

@@ -1,0 +1,308 @@
+"""Minimal stand-in for the subset of `hypothesis` this repo's tests use.
+
+The real hypothesis package is an optional dev dependency (pyproject
+``[dev]`` extra).  When it is not installed, ``conftest.py`` calls
+:func:`install`, which registers this module under ``sys.modules``so the
+test files' ``from hypothesis import given, ...`` imports keep working.
+
+Scope (deliberately small):
+
+* strategies: ``integers, floats, booleans, sampled_from, lists, just,
+  tuples, composite``
+* ``@given`` with positional or keyword strategies (rightmost-parameter
+  binding, like hypothesis)
+* ``@settings(max_examples=..., deadline=...)`` above or below ``@given``
+* ``assume`` (failed assumptions discard the example and redraw)
+
+Examples are drawn from a ``random.Random`` seeded by the test's qualified
+name, so runs are deterministic; boundary values are tried first the way
+hypothesis biases toward edge cases.  It does **not** shrink failing
+examples — the failing inputs are attached to the assertion message
+instead.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import zlib
+from typing import Any, Callable, Iterable, Optional, Sequence
+
+DEFAULT_MAX_EXAMPLES = 100
+_MAX_ASSUME_RETRIES_FACTOR = 20
+
+
+class UnsatisfiedAssumption(Exception):
+    pass
+
+
+def assume(condition: Any) -> bool:
+    if not condition:
+        raise UnsatisfiedAssumption()
+    return True
+
+
+class HealthCheck:
+    """Placeholder for ``hypothesis.HealthCheck`` (accepted, ignored)."""
+
+    all = classmethod(lambda cls: [])
+    too_slow = "too_slow"
+    filter_too_much = "filter_too_much"
+    function_scoped_fixture = "function_scoped_fixture"
+
+
+# ---------------------------------------------------------------------------
+# strategies
+# ---------------------------------------------------------------------------
+class SearchStrategy:
+    def example(self, rng: random.Random) -> Any:
+        raise NotImplementedError
+
+    def boundary_examples(self) -> list:
+        """Deterministic edge-case values tried before random sampling."""
+        return []
+
+
+class _Integers(SearchStrategy):
+    def __init__(self, min_value: Optional[int] = None, max_value: Optional[int] = None):
+        self.lo = -(2**63) if min_value is None else int(min_value)
+        self.hi = 2**63 if max_value is None else int(max_value)
+
+    def example(self, rng):
+        return rng.randint(self.lo, self.hi)
+
+    def boundary_examples(self):
+        return [self.lo, self.hi] if self.lo != self.hi else [self.lo]
+
+
+class _Floats(SearchStrategy):
+    def __init__(
+        self,
+        min_value: Optional[float] = None,
+        max_value: Optional[float] = None,
+        allow_nan: Optional[bool] = None,
+        allow_infinity: Optional[bool] = None,
+        width: int = 64,
+        exclude_min: bool = False,
+        exclude_max: bool = False,
+    ):
+        self.lo = -1e9 if min_value is None else float(min_value)
+        self.hi = 1e9 if max_value is None else float(max_value)
+        self.exclude_min = exclude_min
+        self.exclude_max = exclude_max
+
+    def example(self, rng):
+        span = self.hi - self.lo
+        x = self.lo + rng.random() * span
+        if self.exclude_min and x == self.lo:
+            x = self.lo + span * sys.float_info.epsilon
+        if self.exclude_max and x == self.hi:
+            x = self.hi - span * sys.float_info.epsilon
+        return x
+
+    def boundary_examples(self):
+        out = []
+        if not self.exclude_min:
+            out.append(self.lo)
+        if not self.exclude_max and self.hi != self.lo:
+            out.append(self.hi)
+        mid = 0.5 * (self.lo + self.hi)
+        out.append(mid)
+        return out
+
+
+class _Booleans(SearchStrategy):
+    def example(self, rng):
+        return rng.random() < 0.5
+
+    def boundary_examples(self):
+        return [False, True]
+
+
+class _SampledFrom(SearchStrategy):
+    def __init__(self, elements: Sequence):
+        self.elements = list(elements)
+        if not self.elements:
+            raise ValueError("sampled_from requires a non-empty sequence")
+
+    def example(self, rng):
+        return rng.choice(self.elements)
+
+    def boundary_examples(self):
+        return [self.elements[0], self.elements[-1]]
+
+
+class _Lists(SearchStrategy):
+    def __init__(self, elements: SearchStrategy, min_size: int = 0, max_size: int = 10):
+        self.elements = elements
+        self.min_size = min_size
+        self.max_size = max_size if max_size is not None else min_size + 10
+
+    def example(self, rng):
+        n = rng.randint(self.min_size, self.max_size)
+        return [self.elements.example(rng) for _ in range(n)]
+
+
+class _Just(SearchStrategy):
+    def __init__(self, value):
+        self.value = value
+
+    def example(self, rng):
+        return self.value
+
+    def boundary_examples(self):
+        return [self.value]
+
+
+class _Tuples(SearchStrategy):
+    def __init__(self, *strategies: SearchStrategy):
+        self.strategies = strategies
+
+    def example(self, rng):
+        return tuple(s.example(rng) for s in self.strategies)
+
+
+class _Composite(SearchStrategy):
+    def __init__(self, fn: Callable, args: tuple, kwargs: dict):
+        self.fn = fn
+        self.args = args
+        self.kwargs = kwargs
+
+    def example(self, rng):
+        def draw(strategy: SearchStrategy):
+            return strategy.example(rng)
+
+        return self.fn(draw, *self.args, **self.kwargs)
+
+
+class _StrategiesModule:
+    """Namespace mirroring ``hypothesis.strategies``."""
+
+    __name__ = "hypothesis.strategies"
+
+    @staticmethod
+    def integers(min_value=None, max_value=None):
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def floats(min_value=None, max_value=None, **kwargs):
+        return _Floats(min_value, max_value, **kwargs)
+
+    @staticmethod
+    def booleans():
+        return _Booleans()
+
+    @staticmethod
+    def sampled_from(elements):
+        return _SampledFrom(elements)
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        return _Lists(elements, min_size, max_size)
+
+    @staticmethod
+    def just(value):
+        return _Just(value)
+
+    @staticmethod
+    def tuples(*strategies):
+        return _Tuples(*strategies)
+
+    @staticmethod
+    def composite(fn):
+        @functools.wraps(fn)
+        def make(*args, **kwargs):
+            return _Composite(fn, args, kwargs)
+
+        return make
+
+
+strategies = _StrategiesModule()
+
+
+# ---------------------------------------------------------------------------
+# @settings / @given
+# ---------------------------------------------------------------------------
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, **_ignored):
+    """Accepts (and mostly ignores) the hypothesis settings surface; only
+    ``max_examples`` changes behavior here."""
+
+    def deco(fn):
+        fn._mh_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def _seed_for(fn: Callable) -> int:
+    return zlib.adler32(fn.__qualname__.encode())
+
+
+def given(*pos_strategies: SearchStrategy, **kw_strategies: SearchStrategy):
+    def deco(fn):
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        # hypothesis binds positional strategies to the RIGHTMOST parameters
+        bound_names = set(kw_strategies)
+        if pos_strategies:
+            tail = [p.name for p in params][-len(pos_strategies):]
+            bound_names.update(tail)
+            pos_named = dict(zip(tail, pos_strategies))
+        else:
+            pos_named = {}
+        draw_order = {**pos_named, **kw_strategies}
+        passthrough = [p for p in params if p.name not in bound_names]
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            max_examples = getattr(
+                wrapper, "_mh_max_examples",
+                getattr(fn, "_mh_max_examples", DEFAULT_MAX_EXAMPLES),
+            )
+            rng = random.Random(_seed_for(fn))
+            examples_run = 0
+            attempts = 0
+            boundary_iter = _boundary_combos(draw_order)
+            while examples_run < max_examples:
+                attempts += 1
+                if attempts > max_examples * _MAX_ASSUME_RETRIES_FACTOR:
+                    break  # assumption too strict; behave like hypothesis's give-up
+                drawn = next(boundary_iter, None)
+                if drawn is None:
+                    drawn = {k: s.example(rng) for k, s in draw_order.items()}
+                try:
+                    fn(*args, **{**kwargs, **drawn})
+                except UnsatisfiedAssumption:
+                    continue
+                except AssertionError as e:
+                    raise AssertionError(
+                        f"{e}\nFalsifying example ({fn.__qualname__}): {drawn!r}"
+                    ) from e
+                examples_run += 1
+
+        wrapper.__signature__ = sig.replace(parameters=passthrough)
+        # plugins (e.g. anyio) probe `fn.hypothesis.inner_test`
+        wrapper.hypothesis = type("_Hypothesis", (), {"inner_test": staticmethod(fn)})()
+        return wrapper
+
+    return deco
+
+
+def _boundary_combos(draw_order: dict):
+    """Yield a few deterministic edge-case combinations (first example uses
+    every strategy's first boundary value, second uses the second, ...)."""
+    tables = {k: s.boundary_examples() for k, s in draw_order.items()}
+    if not tables or any(not v for v in tables.values()):
+        return
+    depth = min(2, min(len(v) for v in tables.values()))
+    for i in range(depth):
+        yield {k: v[min(i, len(v) - 1)] for k, v in tables.items()}
+
+
+def install() -> None:
+    """Register this module as ``hypothesis`` in ``sys.modules`` (only when
+    the real package is absent — callers must check first)."""
+    mod = sys.modules[__name__]
+    sys.modules.setdefault("hypothesis", mod)
+    sys.modules.setdefault("hypothesis.strategies", strategies)  # type: ignore[arg-type]

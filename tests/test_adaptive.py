@@ -1,0 +1,374 @@
+"""Adaptive power-policy tests.
+
+Covers the ISSUE-1 acceptance criteria:
+
+* `AdaptiveStrategy` picks Idle-Waiting below the analytical crossover and
+  On-Off above it, with n_max BIT-IDENTICAL to the winning static strategy;
+* property: the analytical adaptive controller never does worse than the
+  better static strategy (random items × periods × budgets);
+* the online `PolicyController` converges to the best static on stationary
+  arrivals and beats both statics on bursty traffic;
+* the trace simulator agrees with the closed-form model on deterministic
+  arrivals and respects the budget on stochastic ones.
+"""
+import math
+
+import pytest
+from hypothesis import assume, given, settings
+from hypothesis import strategies as st
+
+from repro.core import energy_model as em
+from repro.core.adaptive import (
+    AdaptiveStrategy,
+    PolicyController,
+    StaticPolicy,
+    break_even_timeout_ms,
+)
+from repro.core.arrivals import (
+    DeterministicArrivals,
+    MMPPArrivals,
+    PoissonArrivals,
+)
+from repro.core.phases import (
+    CONFIGURATION,
+    DATA_LOADING,
+    DATA_OFFLOADING,
+    INFERENCE,
+    Phase,
+    WorkloadItem,
+    paper_lstm_item,
+)
+from repro.core.simulator import simulate_trace
+from repro.core.strategies import (
+    IdlePowerMethod,
+    IdleWaitingStrategy,
+    OnOffStrategy,
+)
+
+OVERHEAD = em.CALIBRATED_POWERUP_OVERHEAD_MJ
+M12 = IdlePowerMethod.METHOD1_2
+
+
+@pytest.fixture
+def item():
+    return paper_lstm_item()
+
+
+# ---------------------------------------------------------------------------
+# regression: the paper's headline numbers through the adaptive controller
+# ---------------------------------------------------------------------------
+class TestPaperNumbers:
+    def test_crossover_is_499_06_ms(self, item):
+        """The adaptive decision threshold IS the paper's crossover."""
+        strat = AdaptiveStrategy(item, OVERHEAD, method=M12)
+        assert strat.crossover_ms() == pytest.approx(499.06, rel=1e-3)
+
+    def test_adaptive_at_40ms_matches_12_39x(self, item):
+        """At the paper's 40 ms / 4147 J point the adaptive controller locks
+        onto Idle-Waiting and reproduces the 12.39× lifetime ratio."""
+        strat = AdaptiveStrategy(item, OVERHEAD, method=M12)
+        adaptive = strat.evaluate(40.0, em.PAPER_ENERGY_BUDGET_MJ)
+        onoff = OnOffStrategy(item, OVERHEAD).evaluate(40.0, em.PAPER_ENERGY_BUDGET_MJ)
+        assert "idle_waiting" in adaptive.strategy
+        assert adaptive.n_max / onoff.n_max == pytest.approx(12.39, rel=5e-3)
+
+    def test_break_even_below_crossover(self, item):
+        """T*_be = T_cross − T_latency^IW (the ski-rental timeout the hybrid
+        regime uses)."""
+        t_be = break_even_timeout_ms(item, 24.0, OVERHEAD)
+        cross = em.crossover_period_ms(item, 24.0, OVERHEAD)
+        assert t_be == pytest.approx(cross - item.execution_time_ms, rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# analytical controller: bit-identical convergence + never-worse property
+# ---------------------------------------------------------------------------
+class TestAdaptiveStrategy:
+    @pytest.mark.parametrize("period_ms", [40.0, 100.0, 250.0, 495.0])
+    def test_below_crossover_bit_identical_to_idlewait(self, item, period_ms):
+        strat = AdaptiveStrategy(item, OVERHEAD, method=M12)
+        iw = IdleWaitingStrategy(item, OVERHEAD, method=M12)
+        a = strat.evaluate(period_ms, em.PAPER_ENERGY_BUDGET_MJ)
+        b = iw.evaluate(period_ms, em.PAPER_ENERGY_BUDGET_MJ)
+        assert a.n_max == b.n_max
+        assert a.lifetime_ms == b.lifetime_ms
+
+    @pytest.mark.parametrize("period_ms", [505.0, 1000.0, 5000.0])
+    def test_above_crossover_bit_identical_to_onoff(self, item, period_ms):
+        strat = AdaptiveStrategy(item, OVERHEAD, method=M12)
+        oo = OnOffStrategy(item, OVERHEAD)
+        a = strat.evaluate(period_ms, em.PAPER_ENERGY_BUDGET_MJ)
+        b = oo.evaluate(period_ms, em.PAPER_ENERGY_BUDGET_MJ)
+        assert a.n_max == b.n_max
+
+    def test_hysteresis_holds_previous_inside_band(self, item):
+        strat = AdaptiveStrategy(item, OVERHEAD, method=M12, hysteresis=0.1)
+        cross = strat.crossover_ms()
+        inside = cross * 1.05          # above crossover but inside the band
+        assert strat.decide(inside, previous="idle_waiting") == "idle_waiting"
+        assert strat.decide(inside, previous="on_off") == "on_off"
+        outside = cross * 1.2
+        assert strat.decide(outside, previous="idle_waiting") == "on_off"
+        assert strat.decide(cross * 0.8, previous="on_off") == "idle_waiting"
+
+
+power = st.floats(min_value=1.0, max_value=2000.0, allow_nan=False)
+short_t = st.floats(min_value=1e-4, max_value=5.0, allow_nan=False)
+cfg_t = st.floats(min_value=0.5, max_value=100.0, allow_nan=False)
+idle_p = st.floats(min_value=0.1, max_value=500.0, allow_nan=False)
+
+
+@st.composite
+def items(draw):
+    return WorkloadItem(
+        name="random",
+        phases=(
+            Phase(CONFIGURATION, draw(power), draw(cfg_t)),
+            Phase(DATA_LOADING, draw(power), draw(short_t)),
+            Phase(INFERENCE, draw(power), draw(short_t)),
+            Phase(DATA_OFFLOADING, draw(power), draw(short_t)),
+        ),
+        idle_power_mw=draw(idle_p),
+    )
+
+
+@given(items(), st.floats(min_value=0.5, max_value=5000.0),
+       st.floats(min_value=100.0, max_value=1e6))
+def test_adaptive_never_worse_than_better_static(item, slack_ms, budget_mj):
+    """The ISSUE's property: on stationary (constant-period) arrivals the
+    adaptive controller is never worse than the better static strategy —
+    its closed-form result equals the max of the two."""
+    t_req = item.total_time_ms + slack_ms
+    strat = AdaptiveStrategy(item)
+    n_a = strat.evaluate(t_req, budget_mj).n_max
+    n_oo = OnOffStrategy(item).evaluate(t_req, budget_mj).n_max
+    n_iw = IdleWaitingStrategy(item).evaluate(t_req, budget_mj).n_max
+    assert n_a == max(n_oo, n_iw)
+
+
+@given(items())
+def test_adaptive_decision_matches_marginal_energy(item):
+    """decide() picks whichever strategy has the lower marginal per-item
+    energy (the crossover's defining property)."""
+    strat = AdaptiveStrategy(item)
+    cross = strat.crossover_ms()
+    assume(math.isfinite(cross) and cross > item.total_time_ms * 1.05)
+    for t_req in (cross * 0.7, cross * 1.3):
+        assume(t_req >= item.execution_time_ms)
+        e_iw = em.idlewait_item_energy_mj(item) + em.idle_energy_mj(item, t_req)
+        e_oo = em.onoff_item_energy_mj(item)
+        want = "idle_waiting" if e_iw <= e_oo else "on_off"
+        assert strat.decide(t_req) == want
+
+
+# ---------------------------------------------------------------------------
+# online controller (PolicyController)
+# ---------------------------------------------------------------------------
+class TestPolicyController:
+    def make(self, item, **kw):
+        kw.setdefault("method", M12)
+        kw.setdefault("powerup_overhead_mj", OVERHEAD)
+        return PolicyController(item, **kw)
+
+    def test_warmup_uses_break_even_hybrid(self, item):
+        pc = self.make(item)
+        assert pc.regime() == "hybrid"
+        assert pc.idle_timeout_ms() == pytest.approx(pc.break_even_ms())
+
+    def test_converges_to_idlewait_below_crossover(self, item):
+        pc = self.make(item)
+        for _ in range(10):
+            pc.observe_gap(40.0)
+        assert pc.regime() == "idle_waiting"
+        assert math.isinf(pc.idle_timeout_ms())
+
+    def test_converges_to_onoff_above_crossover(self, item):
+        pc = self.make(item)
+        for _ in range(10):
+            pc.observe_gap(2000.0)
+        assert pc.regime() == "on_off"
+        assert pc.idle_timeout_ms() == 0.0
+
+    def test_bursty_stream_stays_hybrid(self, item):
+        pc = self.make(item)
+        regimes = []
+        for _ in range(20):
+            for _ in range(8):
+                pc.observe_gap(50.0)
+                regimes.append(pc.regime())
+            pc.observe_gap(5000.0)
+            regimes.append(pc.regime())
+        # burstiness latches: once detected, mid-burst CV dips don't unlatch
+        assert pc.regime() == "hybrid"
+        assert regimes[-60:] == ["hybrid"] * 60
+        assert pc.idle_timeout_ms() == pytest.approx(pc.break_even_ms())
+
+    def test_hysteresis_prevents_flapping_near_crossover(self, item):
+        """Alternating gaps straddling the crossover: the guarded controller
+        settles; an unguarded one flaps every few observations."""
+        guarded = self.make(item, hysteresis=0.15)
+        naked = self.make(item, hysteresis=0.0)
+        cross = guarded.crossover_ms()
+        for i in range(200):
+            gap = cross * (0.9 if i % 2 == 0 else 1.1)
+            for pc in (guarded, naked):
+                pc.observe_gap(gap)
+                pc.regime()
+        assert guarded.regime_switches <= 2
+        assert naked.regime_switches > guarded.regime_switches
+
+    def test_ewma_estimate_tracks_mean(self, item):
+        pc = self.make(item)
+        for g in PoissonArrivals(100.0).inter_arrival_times(4000, seed=0):
+            pc.observe_gap(float(g))
+        assert pc.estimate_ms == pytest.approx(100.0, rel=0.5)
+
+    def test_poisson_below_crossover_never_picks_onoff(self, item):
+        """At a 100 ms Poisson mean (far below the crossover) the noisy CV
+        estimate may keep the burstiness latch engaged — hybrid is a safe
+        ≤2×-bounded choice — but the controller must never flip to the
+        LOSING regime (On-Off), whose timeout-0 releases would pay a
+        reconfiguration per request."""
+        pc = self.make(item)
+        regimes = []
+        for g in PoissonArrivals(100.0).inter_arrival_times(4000, seed=0):
+            pc.observe_gap(float(g))
+            regimes.append(pc.regime())
+        assert "on_off" not in regimes[10:]
+        assert regimes.count("idle_waiting") > 0     # mean rule does engage
+        assert pc.idle_timeout_ms() > 0.0
+
+    def test_negative_gap_rejected(self, item):
+        with pytest.raises(ValueError):
+            self.make(item).observe_gap(-1.0)
+
+
+# ---------------------------------------------------------------------------
+# trace simulator ↔ analytical model agreement (incl. stochastic arrivals)
+# ---------------------------------------------------------------------------
+class TestTraceSimAgreement:
+    @pytest.mark.parametrize("period_ms", [40.0, 200.0, 800.0])
+    def test_static_policies_match_closed_form(self, item, period_ms):
+        budget = 5_000.0
+        arrivals = DeterministicArrivals(period_ms).arrival_times(50_000)
+        oo = StaticPolicy("on_off", item, method=M12, powerup_overhead_mj=OVERHEAD)
+        res = simulate_trace(item, arrivals, oo, budget, OVERHEAD)
+        assert res.n_items == em.onoff_n_max(item, budget, OVERHEAD)
+        iw = StaticPolicy("idle_waiting", item, method=M12,
+                          powerup_overhead_mj=OVERHEAD)
+        res = simulate_trace(item, arrivals, iw, budget, OVERHEAD)
+        assert res.n_items == em.idlewait_n_max(
+            item, period_ms, budget, iw.idle_power_mw, OVERHEAD
+        )
+
+    @settings(max_examples=30, deadline=None)
+    @given(items(), st.integers(min_value=0, max_value=300),
+           st.floats(min_value=0.1, max_value=0.9),
+           st.floats(min_value=0.5, max_value=500.0))
+    def test_trace_nmax_equals_closed_form_off_boundary(
+        self, item, n_target, frac, slack_ms
+    ):
+        """Random items × budgets engineered to land mid-interval: the trace
+        event loop and the closed forms agree exactly for both statics."""
+        t_req = item.total_time_ms + slack_ms
+        arrivals = DeterministicArrivals(t_req).arrival_times(n_target + 2)
+        for kind in ("on_off", "idle_waiting"):
+            pol = StaticPolicy(kind, item)
+            if kind == "on_off":
+                per = em.onoff_item_energy_mj(item)
+                budget = (n_target + frac) * per
+                want = em.onoff_n_max(item, budget)
+            else:
+                per = em.idlewait_item_energy_mj(item) + em.idle_energy_mj(item, t_req)
+                budget = em.idlewait_init_energy_mj(item) + (n_target + frac - 1) * per + per
+                want = em.idlewait_n_max(item, t_req, budget)
+            res = simulate_trace(item, arrivals, pol, budget)
+            assert res.n_items == min(want, n_target + 2)
+
+    @settings(max_examples=25, deadline=None)
+    @given(items(), st.floats(min_value=1.0, max_value=100.0),
+           st.integers(min_value=0, max_value=10_000))
+    def test_budget_never_exceeded_on_stochastic_arrivals(
+        self, item, budget_j, seed
+    ):
+        """Simulator/analytical agreement extended to stochastic arrivals:
+        whatever the policy does, admitted energy stays within budget."""
+        proc = MMPPArrivals(
+            burst_ms=max(item.execution_time_ms * 2, 1.0),
+            quiet_ms=max(item.total_time_ms * 20, 100.0),
+        )
+        arrivals = proc.arrival_times(2_000, seed)
+        budget = budget_j * 1000.0
+        for policy in (
+            StaticPolicy("on_off", item),
+            StaticPolicy("idle_waiting", item),
+            PolicyController(item),
+        ):
+            res = simulate_trace(item, arrivals, policy, budget)
+            assert res.energy_used_mj <= budget * (1 + 1e-9)
+            assert res.energy_used_mj == pytest.approx(
+                sum(res.energy_by_phase_mj.values()), rel=1e-9
+            )
+
+    def test_queueing_when_arrivals_outpace_service(self, item):
+        """Arrivals faster than the execution latency queue rather than
+        being dropped; every request is eventually served."""
+        arrivals = DeterministicArrivals(item.execution_time_ms / 4).arrival_times(50)
+        pol = StaticPolicy("idle_waiting", item)
+        res = simulate_trace(item, arrivals, pol, 1e9)
+        assert res.n_items == 50
+        assert res.lifetime_ms >= 50 * item.execution_time_ms
+
+
+# ---------------------------------------------------------------------------
+# online controller end-to-end on traces
+# ---------------------------------------------------------------------------
+class TestAdaptiveOnTraces:
+    BUDGET = 10_000.0
+
+    def run(self, item, arrivals, policy, name=None):
+        return simulate_trace(item, arrivals, policy, self.BUDGET, OVERHEAD,
+                              policy_name=name)
+
+    def statics(self, item, arrivals):
+        return {
+            k: self.run(
+                item,
+                arrivals,
+                StaticPolicy(k, item, method=M12, powerup_overhead_mj=OVERHEAD),
+            ).n_items
+            for k in ("on_off", "idle_waiting")
+        }
+
+    def adaptive(self, item, arrivals):
+        pc = PolicyController(item, method=M12, powerup_overhead_mj=OVERHEAD)
+        return self.run(item, arrivals, pc, "adaptive").n_items
+
+    def test_matches_best_static_on_fast_stationary(self, item):
+        arrivals = DeterministicArrivals(40.0).arrival_times(50_000)
+        n = self.statics(item, arrivals)
+        assert self.adaptive(item, arrivals) == max(n.values())
+
+    def test_near_best_static_on_slow_stationary(self, item):
+        """Above the crossover the online controller pays a bounded warmup
+        (ski-rental exploration for min_observations gaps) and then matches
+        On-Off item-for-item."""
+        arrivals = DeterministicArrivals(2000.0).arrival_times(50_000)
+        n = self.statics(item, arrivals)
+        n_adaptive = self.adaptive(item, arrivals)
+        warmup_slack = math.ceil(
+            3 * (em.onoff_item_energy_mj(item, OVERHEAD)
+                 - em.idlewait_item_energy_mj(item))
+            / em.onoff_item_energy_mj(item, OVERHEAD)
+        ) + 1
+        assert n_adaptive >= max(n.values()) - warmup_slack
+        assert n_adaptive > min(n.values())
+
+    def test_beats_both_statics_on_bursty(self, item):
+        arrivals = MMPPArrivals(
+            burst_ms=50.0, quiet_ms=5000.0, mean_burst_len=8
+        ).arrival_times(100_000, seed=1)
+        n = self.statics(item, arrivals)
+        n_adaptive = self.adaptive(item, arrivals)
+        assert n_adaptive > n["on_off"]
+        assert n_adaptive > n["idle_waiting"]

@@ -1,0 +1,107 @@
+"""Arrival-process unit tests: determinism, statistics, trace round-trip."""
+import io
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.arrivals import (
+    DeterministicArrivals,
+    MMPPArrivals,
+    PoissonArrivals,
+    TraceArrivals,
+    make_process,
+)
+
+
+class TestDeterministic:
+    def test_constant_period(self):
+        t = DeterministicArrivals(40.0).arrival_times(5)
+        np.testing.assert_allclose(t, [0.0, 40.0, 80.0, 120.0, 160.0])
+
+    def test_first_arrival_at_zero(self):
+        for proc in (
+            DeterministicArrivals(10.0),
+            PoissonArrivals(10.0),
+            MMPPArrivals(5.0, 100.0),
+        ):
+            assert proc.arrival_times(3, seed=4)[0] == 0.0
+
+    def test_invalid_period_rejected(self):
+        with pytest.raises(ValueError):
+            DeterministicArrivals(0.0)
+
+
+class TestSeededDeterminism:
+    @pytest.mark.parametrize(
+        "proc",
+        [PoissonArrivals(25.0), MMPPArrivals(5.0, 500.0, mean_burst_len=4)],
+        ids=["poisson", "mmpp"],
+    )
+    def test_same_seed_same_stream(self, proc):
+        a = proc.inter_arrival_times(500, seed=7)
+        b = proc.inter_arrival_times(500, seed=7)
+        np.testing.assert_array_equal(a, b)
+        c = proc.inter_arrival_times(500, seed=8)
+        assert not np.array_equal(a, c)
+
+
+class TestStatistics:
+    def test_poisson_mean(self):
+        gaps = PoissonArrivals(120.0).inter_arrival_times(40_000, seed=0)
+        assert np.mean(gaps) == pytest.approx(120.0, rel=0.03)
+
+    def test_poisson_is_memoryless_cv_one(self):
+        gaps = PoissonArrivals(50.0).inter_arrival_times(40_000, seed=1)
+        assert np.std(gaps) / np.mean(gaps) == pytest.approx(1.0, abs=0.05)
+
+    def test_mmpp_mean_matches_stationary_mix(self):
+        proc = MMPPArrivals(10.0, 1000.0, mean_burst_len=8, mean_quiet_len=2)
+        gaps = proc.inter_arrival_times(60_000, seed=2)
+        assert np.mean(gaps) == pytest.approx(proc.mean_period_ms(), rel=0.1)
+
+    def test_mmpp_is_overdispersed(self):
+        """Burstiness = CV well above Poisson's 1."""
+        gaps = MMPPArrivals(10.0, 2000.0, mean_burst_len=8).inter_arrival_times(
+            40_000, seed=3
+        )
+        assert np.std(gaps) / np.mean(gaps) > 1.5
+
+
+class TestTrace:
+    def test_round_trip_through_file(self):
+        src = MMPPArrivals(20.0, 800.0)
+        trace = TraceArrivals.record(src, 200, seed=5)
+        buf = io.StringIO()
+        trace.to_file(buf)
+        buf.seek(0)
+        back = TraceArrivals.from_file(buf)
+        np.testing.assert_array_equal(
+            trace.inter_arrival_times(200), back.inter_arrival_times(200)
+        )
+
+    def test_comments_and_blanks_skipped(self):
+        text = "# header\n10.0\n\n20.0  # inline\n30.0\n"
+        back = TraceArrivals.from_file(io.StringIO(text))
+        assert back.gaps_ms == (10.0, 20.0, 30.0)
+
+    def test_cycles_when_exhausted(self):
+        t = TraceArrivals((1.0, 2.0))
+        np.testing.assert_allclose(t.inter_arrival_times(5), [1, 2, 1, 2, 1])
+
+    def test_empty_trace_rejected(self):
+        with pytest.raises(ValueError):
+            TraceArrivals(())
+
+
+class TestFactory:
+    def test_known_kinds(self):
+        assert isinstance(make_process("deterministic", period_ms=10.0),
+                          DeterministicArrivals)
+        assert isinstance(make_process("poisson", mean_ms=10.0), PoissonArrivals)
+        assert isinstance(make_process("bursty", burst_ms=1.0, quiet_ms=10.0),
+                          MMPPArrivals)
+
+    def test_unknown_kind_raises(self):
+        with pytest.raises(ValueError):
+            make_process("fractal")

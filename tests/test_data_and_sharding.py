@@ -4,6 +4,7 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs import get_config
 from repro.data.pipeline import SyntheticLMStream, TimeSeriesStream, batch_for_arch
 from repro.distributed import sharding as shd
@@ -56,7 +57,7 @@ class TestTimeSeries:
 class TestLogicalSharding:
     def setup_method(self):
         # abstract 16×16 production mesh: no devices needed for spec logic
-        self.mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+        self.mesh = compat.abstract_mesh((16, 16), ("data", "model"))
 
     def test_divisibility_filtering(self):
         # vocab 504 on a 16-wide model axis must drop to None
@@ -89,10 +90,13 @@ class TestLogicalSharding:
         assert shd.constrain(x, ("batch", None)) is x
 
     def test_tuple_rule_prefix(self):
+        if len(jax.devices()) < 4:
+            pytest.skip("needs 4 devices")
+        kwargs = {}
+        if hasattr(jax.sharding, "AxisType"):
+            kwargs["axis_types"] = (jax.sharding.AxisType.Auto,) * 3
         mesh = jax.make_mesh(
             (2, 2, 1), ("pod", "data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 3,
             devices=np.array(jax.devices() * 4)[:4].reshape(2, 2, 1),
-        ) if len(jax.devices()) >= 4 else None
-        if mesh is None:
-            pytest.skip("needs 4 devices")
+            **kwargs,
+        )

@@ -5,6 +5,7 @@ import jax.numpy as jnp
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs import SHAPES_BY_NAME, get_config
 from repro.configs.perf import BASELINE, PerfConfig
 from repro.launch import dryrun_lib as dl
@@ -13,12 +14,12 @@ from repro.launch.roofline import RooflineTerms
 
 @pytest.fixture
 def single_mesh():
-    return jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    return compat.abstract_mesh((16, 16), ("data", "model"))
 
 
 @pytest.fixture
 def multi_mesh():
-    return jax.sharding.AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    return compat.abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 class TestBatchPspecs:

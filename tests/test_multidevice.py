@@ -227,6 +227,7 @@ def test_grad_compression_close_to_exact():
     run_py("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro import compat
         from repro.optim import grad_compress as gc
 
         mesh = jax.make_mesh((2, 4), ("pod", "data"))
@@ -236,7 +237,7 @@ def test_grad_compression_close_to_exact():
             out, new_e = gc.compress_psum({"g": g_loc}, gc.CompressState({"g": e_loc}), "pod")
             return out["g"], new_e.error["g"]
 
-        out, err = jax.shard_map(
+        out, err = compat.shard_map(
             body, mesh=mesh,
             in_specs=(P("pod"), P("pod")),
             out_specs=(P("pod"), P("pod")),
@@ -244,7 +245,7 @@ def test_grad_compression_close_to_exact():
         )(g, jnp.zeros_like(g))
         # exact mean over pods of each shard's grads == its own value
         # (each pod holds a different shard half; compare vs exact psum)
-        exact = jax.shard_map(
+        exact = compat.shard_map(
             lambda x: jax.lax.pmean(x, "pod"), mesh=mesh,
             in_specs=P("pod"), out_specs=P("pod"), check_vma=False)(g)
         rel = float(jnp.max(jnp.abs(out - exact)) / jnp.max(jnp.abs(exact)))
