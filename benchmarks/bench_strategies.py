@@ -1,4 +1,17 @@
-"""Experiment 2 (Figs. 8-9): Idle-Waiting vs On-Off across request periods."""
+"""Experiment 2 (Figs. 8-9): Idle-Waiting vs On-Off across request periods.
+
+The period sweep is computed by the vectorized batch engine
+(`repro.core.batch_eval`) and cross-checked row-by-row against the scalar
+discrete-event simulator (``simulate(mode="fast")``) — the reference oracle.
+The derived CSV row reports the crossover, the 40 ms items ratio, and the
+batch-vs-scalar agreement/speedup.
+
+Standalone, a sweep-CLI JSON grid (``--kind strategies``) can be
+re-validated against the simulator::
+
+    PYTHONPATH=src python -m repro.launch.sweep --kind strategies --calibrated --out g.json
+    PYTHONPATH=src python -m benchmarks.bench_strategies --grid g.json
+"""
 from __future__ import annotations
 
 import time
@@ -14,28 +27,88 @@ from repro.core import (
 )
 
 
-def sweep(periods_ms=None) -> list[dict]:
-    periods_ms = periods_ms if periods_ms is not None else np.arange(10.0, 120.01, 10.0)
-    out = []
-    for t in periods_ms:
-        iw = simulate(paper_experiment("idle_waiting", float(t)))
-        oo = simulate(paper_experiment("on_off", float(t)))
-        out.append(
-            {
-                "t_req_ms": float(t),
-                "iw_items": iw.n_items,
-                "onoff_items": oo.n_items,
-                "iw_lifetime_h": iw.lifetime_hours,
-                "onoff_lifetime_h": oo.lifetime_hours,
-            }
+def _batch_sweep(periods_ms):
+    from repro.core import energy_model as em
+    from repro.core.batch_eval import evaluate_idlewait_batch, evaluate_onoff_batch
+
+    item = paper_lstm_item()
+    periods = np.asarray(periods_ms, dtype=float)
+    iw = evaluate_idlewait_batch(
+        item, periods, em.PAPER_ENERGY_BUDGET_MJ, powerup_overhead_mj=CAL
+    )
+    oo = evaluate_onoff_batch(
+        item, periods, em.PAPER_ENERGY_BUDGET_MJ, powerup_overhead_mj=CAL
+    )
+    return iw, oo
+
+
+def _check_against_simulator(rec: dict, sim_iw, sim_oo) -> None:
+    # plain raises (not asserts): the EXACT claim must survive python -O
+    if rec["iw_items"] != sim_iw.n_items:
+        raise RuntimeError(
+            f"batch IW n_max {rec['iw_items']} != simulator {sim_iw.n_items} "
+            f"at {rec['t_req_ms']} ms"
         )
+    if rec["onoff_items"] != sim_oo.n_items:
+        raise RuntimeError(
+            f"batch On-Off n_max {rec['onoff_items']} != simulator {sim_oo.n_items} "
+            f"at {rec['t_req_ms']} ms"
+        )
+
+
+def sweep(periods_ms=None, check: bool = True) -> list[dict]:
+    """Period sweep via the batch engine; with ``check`` every row is
+    verified against the scalar simulator's n_items (exact)."""
+    periods_ms = periods_ms if periods_ms is not None else np.arange(10.0, 120.01, 10.0)
+    iw, oo = _batch_sweep(periods_ms)
+    out = []
+    for i, t in enumerate(periods_ms):
+        rec = {
+            "t_req_ms": float(t),
+            "iw_items": int(iw.n_max[i]),
+            "onoff_items": int(oo.n_max[i]),
+            "iw_lifetime_h": float(iw.lifetime_ms[i]) / 3_600_000.0,
+            "onoff_lifetime_h": float(oo.lifetime_ms[i]) / 3_600_000.0,
+        }
+        if check:
+            _check_against_simulator(
+                rec,
+                simulate(paper_experiment("idle_waiting", float(t))),
+                simulate(paper_experiment("on_off", float(t))),
+            )
+        out.append(rec)
     return out
 
 
 def rows() -> list[tuple[str, float, str]]:
+    periods = np.arange(10.0, 120.01, 10.0)
+
+    # scalar path rate (simulator oracle, one call per point per strategy);
+    # the results double as the agreement check below
     t0 = time.perf_counter()
-    table = sweep()
-    us = (time.perf_counter() - t0) * 1e6 / len(table)
+    sims = {
+        float(t): (
+            simulate(paper_experiment("idle_waiting", float(t))),
+            simulate(paper_experiment("on_off", float(t))),
+        )
+        for t in periods
+    }
+    scalar_pps = len(periods) / (time.perf_counter() - t0)
+
+    # batch path rate at production sweep resolution (4096 periods/call)
+    dense = np.linspace(10.0, 900.0, 4096)
+    _batch_sweep(dense)  # warm the dispatch path
+    reps = 5
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        _batch_sweep(dense)
+    batch_s = (time.perf_counter() - t0) / reps
+    batch_pps = len(dense) / batch_s
+
+    table = sweep(periods, check=False)
+    for rec in table:  # batch == simulator on every row, reusing the timed sims
+        _check_against_simulator(rec, *sims[rec["t_req_ms"]])
+    us = batch_s * 1e6 / len(dense)
     cross = crossover_period_ms(paper_lstm_item(), powerup_overhead_mj=CAL)
     at40 = next(r for r in table if r["t_req_ms"] == 40.0)
     return [
@@ -44,7 +117,9 @@ def rows() -> list[tuple[str, float, str]]:
             us,
             f"cross={cross:.2f}ms ratio@40ms={at40['iw_items']/at40['onoff_items']:.2f} "
             f"iw_range=[{min(r['iw_items'] for r in table)},"
-            f"{max(r['iw_items'] for r in table)}]",
+            f"{max(r['iw_items'] for r in table)}] "
+            f"batch_agrees_sim=EXACT batch_pps={batch_pps:,.0f} "
+            f"scalar_pps={scalar_pps:,.0f} speedup={batch_pps/scalar_pps:.0f}x",
         )
     ]
 
@@ -56,3 +131,58 @@ def print_table() -> None:
             f"{r['t_req_ms']:8.1f} | {r['iw_items']:10,d} {r['onoff_items']:10,d} | "
             f"{r['iw_lifetime_h']:6.2f} {r['onoff_lifetime_h']:7.2f}"
         )
+
+
+def validate_grid(path: str) -> int:
+    """Re-validate a sweep-CLI JSON grid (``--kind strategies``) against the
+    scalar strategies.  Returns the number of mismatching records."""
+    import json
+
+    from benchmarks.bench_config_sweep import oracle_params
+    from repro.core import (
+        DEVICES,
+        IdlePowerMethod,
+        IdleWaitingStrategy,
+        OnOffStrategy,
+        WorkloadItem,
+    )
+    from repro.core.phases import CONFIGURATION
+
+    with open(path) as f:
+        payload = json.load(f)
+    if payload.get("kind") != "strategies":
+        raise SystemExit(f"{path}: expected kind 'strategies', got {payload.get('kind')!r}")
+    base = WorkloadItem.from_dict(payload["item"])
+    powerup = float(payload.get("powerup_overhead_mj", 0.0))
+    exec_phases = tuple(p for p in base.phases if p.name != CONFIGURATION)
+    bad = 0
+    for rec in payload["records"]:
+        dev = DEVICES[rec["device"]]
+        params = oracle_params(int(rec["buswidth"]), float(rec["clock_mhz"]), bool(rec["compression"]))
+        item = WorkloadItem(base.name, (dev.config_phase(params),) + exec_phases, base.idle_power_mw)
+        method = IdlePowerMethod(rec["idle_method"])
+        t, b = float(rec["request_period_ms"]), float(rec["e_budget_mj"])
+        iw = IdleWaitingStrategy(item, powerup, method=method).evaluate(t, b)
+        oo = OnOffStrategy(item, powerup).evaluate(t, b)
+        for key, want in (("iw_n_max", iw.n_max), ("onoff_n_max", oo.n_max)):
+            if int(rec[key]) != want:
+                bad += 1
+                print(f"MISMATCH {rec['device']} {params} T={t}: {key} {rec[key]} != {want}")
+    print(f"{len(payload['records'])} records checked, {bad} mismatches")
+    return bad
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--grid", default=None, help="sweep-CLI JSON grid to validate")
+    ap.add_argument("--table", action="store_true", help="print the period sweep")
+    args = ap.parse_args()
+    if args.grid:
+        raise SystemExit(1 if validate_grid(args.grid) else 0)
+    if args.table:
+        print_table()
+    else:
+        for r in rows():
+            print(f"{r[0]},{r[1]:.1f},{r[2]}")

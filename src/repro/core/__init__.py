@@ -11,6 +11,12 @@
                    controller with hysteresis-guarded ski-rental hybrid)
 - tpu_energy     : TPU-pod adaptation of the phase/energy model (DESIGN.md §3)
 - duty_cycle     : runnable duty-cycle controller for the serving engine
+- batch_eval     : vectorized (jax.numpy) batch sweep engine — whole design
+                   grids per call, bit-exact vs the scalar closed forms
+- pareto         : Pareto frontiers + crossover surfaces over batch grids
+
+``batch_eval`` and ``pareto`` are lazy attributes (PEP 562): they import
+jax, which the scalar core deliberately does not.
 """
 from repro.core.phases import (
     CONFIGURATION,
@@ -91,4 +97,20 @@ from repro.core.adaptive import (
     break_even_timeout_ms,
 )
 
+_LAZY_MODULES = ("batch_eval", "pareto")
+
+
+def __getattr__(name: str):
+    if name in _LAZY_MODULES:
+        import importlib
+
+        mod = importlib.import_module(f"repro.core.{name}")
+        globals()[name] = mod
+        return mod
+    raise AttributeError(f"module 'repro.core' has no attribute {name!r}")
+
+
+# The lazy modules stay OUT of __all__ on purpose: `import *` iterates
+# __all__ and would eagerly trigger __getattr__, pulling jax into scalar-only
+# consumers.
 __all__ = [k for k in dir() if not k.startswith("_")]

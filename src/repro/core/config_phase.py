@@ -166,13 +166,41 @@ class SweepPoint:
     load_energy_mj: float
 
 
+def _validate_grid_axis(
+    name: str,
+    values: Sequence,
+    sorted_required: bool = True,
+    caller: str = "sweep_config_space",
+) -> None:
+    if len(values) == 0:
+        raise ValueError(
+            f"{caller}(): {name} is empty — the sweep would be a "
+            "silent no-op; pass at least one value"
+        )
+    vals = list(values)
+    if sorted_required and any(b < a for a, b in zip(vals, vals[1:])):
+        raise ValueError(
+            f"{caller}(): {name} must be sorted ascending "
+            f"(got {vals!r}) — downstream consumers index sweep points by "
+            "grid order"
+        )
+
+
 def sweep_config_space(
     device: FpgaDevice,
     buswidths: Sequence[int] = SPI_BUSWIDTHS,
     clocks_mhz: Sequence[float] = SPI_CLOCKS_MHZ,
     compression: Sequence[bool] = COMPRESSION_OPTIONS,
 ) -> list[SweepPoint]:
-    """Exhaustive sweep of the configuration parameter space (66 points)."""
+    """Exhaustive sweep of the configuration parameter space (66 points).
+
+    Axes must be non-empty and sorted ascending (``ValueError`` otherwise):
+    callers index the returned list by ``itertools.product`` grid order, so
+    an empty or shuffled axis silently corrupts that mapping.
+    """
+    _validate_grid_axis("buswidths", buswidths)
+    _validate_grid_axis("clocks_mhz", clocks_mhz)
+    _validate_grid_axis("compression", compression)
     out = []
     for w, f, c in itertools.product(buswidths, clocks_mhz, compression):
         p = ConfigParams(w, f, c)

@@ -30,6 +30,13 @@ from repro.core.phases import WorkloadItem
 #: The paper's system energy budget: 320 mAh LiPo ≈ 4147 J (§2), in mJ.
 PAPER_ENERGY_BUDGET_MJ = 4_147_000.0
 
+#: Epsilon added before flooring n_max so budgets landing exactly on a
+#: cumulative-energy boundary admit the boundary item despite fp64 rounding.
+#: Shared with the vectorized path (repro.core.batch_eval) — both floors must
+#: use the same convention or scalar/batched n_max can differ by one at
+#: boundaries.
+FLOOR_EPS = 1e-9
+
 #: Calibrated per-item power-up overhead for On-Off (DESIGN.md §2).
 CALIBRATED_POWERUP_OVERHEAD_MJ = 0.12455
 
@@ -79,7 +86,7 @@ def onoff_n_max(
     e_item = onoff_item_energy_mj(item, powerup_overhead_mj)
     if e_item <= 0:
         raise ValueError("On-Off item energy must be positive")
-    return int(math.floor(e_budget_mj / e_item + 1e-9))
+    return int(math.floor(e_budget_mj / e_item + FLOOR_EPS))
 
 
 def evaluate_onoff(
@@ -163,7 +170,7 @@ def idlewait_n_max(
     if per_period <= 0:
         raise ValueError("Idle-Waiting per-period energy must be positive")
     # E_init + n·e_item + (n−1)·e_idle ≤ B  ⇔  n ≤ (B − E_init + e_idle)/(e_item + e_idle)
-    n = int(math.floor((e_budget_mj - e_init + e_idle) / per_period + 1e-9))
+    n = int(math.floor((e_budget_mj - e_init + e_idle) / per_period + FLOOR_EPS))
     return max(n, 0)
 
 

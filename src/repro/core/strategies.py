@@ -67,7 +67,11 @@ class Strategy:
     def sweep(
         self, request_periods_ms: Iterable[float], e_budget_mj: float
     ) -> list[em.StrategyResult]:
-        return [self.evaluate(t, e_budget_mj) for t in request_periods_ms]
+        from repro.core.config_phase import _validate_grid_axis
+
+        periods = list(request_periods_ms)
+        _validate_grid_axis("request_periods_ms", periods, caller=f"{self.name}.sweep")
+        return [self.evaluate(t, e_budget_mj) for t in periods]
 
     def min_request_period_ms(self) -> float:
         raise NotImplementedError

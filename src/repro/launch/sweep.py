@@ -1,0 +1,221 @@
+"""Batch design-space sweep CLI (the vectorized engine's front door).
+
+Evaluates the paper's entire design space — (device × SPI buswidth × SPI
+clock × compression × request period × idle-power method × energy budget) —
+in one vectorized call (:mod:`repro.core.batch_eval`) and emits a JSON grid
+consumable by ``benchmarks/bench_config_sweep.py`` / ``bench_strategies.py``
+(both accept the file via ``--grid`` and cross-check it against the scalar
+oracle).
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.sweep --kind strategies \
+        --periods 10:120:10 --methods baseline,method1+2 --calibrated \
+        --out sweep.json
+    PYTHONPATH=src python -m repro.launch.sweep --kind config --devices both
+    PYTHONPATH=src python -m repro.launch.sweep --kind pareto
+    PYTHONPATH=src python -m repro.launch.sweep --kind crossover --idle-powers 134.3,34.2,24.0
+
+Kinds:
+
+    config      Exp.-1 configuration-phase grid (time/power/energy)
+    strategies  full 7-axis strategy grid (n_max, lifetime, crossover, ...)
+    pareto      (energy, time) frontier of the configuration space plus the
+                (energy/item, period, lifetime) frontier of the strategy grid
+    crossover   T_cross(device, buswidth, clock, compression, P_idle) surface
+
+Axis syntax: comma lists (``--periods 10,20,40``) or ``start:stop:step``
+ranges (``--periods 10:120:10``, stop inclusive).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+
+def _parse_axis(spec: str) -> list[float]:
+    """'a:b:step' (inclusive) or 'x,y,z' → list of floats."""
+    if ":" in spec:
+        parts = [float(x) for x in spec.split(":")]
+        if len(parts) != 3:
+            raise argparse.ArgumentTypeError(f"range must be start:stop:step, got {spec!r}")
+        start, stop, step = parts
+        if step <= 0:
+            raise argparse.ArgumentTypeError(f"step must be positive in {spec!r}")
+        out = []
+        x = start
+        while x <= stop + 1e-9:
+            out.append(round(x, 10))
+            x += step
+        return out
+    return [float(x) for x in spec.split(",") if x]
+
+
+def _resolve_devices(spec: str):
+    from repro.core.config_phase import DEVICES
+
+    if spec == "both":
+        return tuple(DEVICES.values())
+    out = []
+    for name in spec.split(","):
+        if name not in DEVICES:
+            raise SystemExit(f"unknown device {name!r}; known: {', '.join(DEVICES)} or 'both'")
+        out.append(DEVICES[name])
+    return tuple(out)
+
+
+def _resolve_methods(spec: str):
+    from repro.core.strategies import IdlePowerMethod
+
+    return tuple(IdlePowerMethod(m) for m in spec.split(","))
+
+
+def _config_axes(args) -> tuple[tuple, tuple, tuple]:
+    """(buswidths, clocks, compression) from CLI args — the one place the
+    configuration-space axes are parsed, shared by every --kind."""
+    from repro.core.config_phase import (
+        COMPRESSION_OPTIONS,
+        SPI_BUSWIDTHS,
+        SPI_CLOCKS_MHZ,
+    )
+
+    buswidths = (
+        tuple(int(w) for w in _parse_axis(args.buswidths)) if args.buswidths else SPI_BUSWIDTHS
+    )
+    clocks = tuple(_parse_axis(args.clocks)) if args.clocks else SPI_CLOCKS_MHZ
+    return buswidths, clocks, COMPRESSION_OPTIONS
+
+
+def build_grid(args) -> "SweepGrid":  # noqa: F821 (forward ref for --help speed)
+    from repro.core import energy_model as em
+    from repro.core.batch_eval import SweepGrid
+
+    buswidths, clocks, compression = _config_axes(args)
+    return SweepGrid(
+        devices=_resolve_devices(args.devices),
+        buswidths=buswidths,
+        clocks_mhz=clocks,
+        compression=compression,
+        request_periods_ms=tuple(_parse_axis(args.periods)),
+        idle_methods=_resolve_methods(args.methods),
+        e_budgets_mj=tuple(b * 1000.0 for b in _parse_axis(args.budgets_j)),
+        powerup_overhead_mj=em.CALIBRATED_POWERUP_OVERHEAD_MJ if args.calibrated else 0.0,
+    )
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.sweep",
+        description="Vectorized design-space sweeps (JSON grids).",
+    )
+    ap.add_argument("--kind", choices=["config", "strategies", "pareto", "crossover"],
+                    default="strategies")
+    ap.add_argument("--devices", default="spartan7-xc7s15",
+                    help="comma list of device names, or 'both'")
+    ap.add_argument("--buswidths", default=None, help="e.g. 1,2,4 (default: Table 1)")
+    ap.add_argument("--clocks", default=None, help="MHz list/range (default: Table 1)")
+    ap.add_argument("--periods", default="10:120:10", help="request periods, ms")
+    ap.add_argument("--methods", default="baseline,method1,method1+2",
+                    help="idle-power methods (Table 3 names)")
+    ap.add_argument("--budgets-j", default="4147", help="energy budgets, J")
+    ap.add_argument("--idle-powers", default="134.3,34.2,24.0",
+                    help="idle powers (mW) for --kind crossover")
+    ap.add_argument("--calibrated", action="store_true",
+                    help="include the calibrated power-up overhead (DESIGN.md §2)")
+    ap.add_argument("--jit", action="store_true",
+                    help="XLA-fused kernels (faster, last-ulp drift vs the scalar oracle)")
+    ap.add_argument("--limit", type=int, default=None, help="cap emitted records")
+    ap.add_argument("--out", default=None, metavar="PATH", help="write JSON here (default stdout)")
+    args = ap.parse_args(argv)
+
+    from repro.core import energy_model as em
+    from repro.core.batch_eval import config_phase_grid, sweep_batch
+    from repro.core.phases import paper_lstm_item
+
+    payload: dict = {"kind": args.kind}
+    t0 = time.perf_counter()
+
+    if args.kind == "config":
+        devices = _resolve_devices(args.devices)
+        buswidths, clocks, compression = _config_axes(args)
+        g = config_phase_grid(devices, buswidths, clocks, compression, jit=args.jit)
+        names = ("device", "buswidth", "clock_mhz", "compression")
+        labels = {
+            "device": [d.name for d in devices],
+            "buswidth": list(buswidths),
+            "clock_mhz": list(clocks),
+            "compression": [bool(c) for c in compression],
+        }
+        import numpy as np
+
+        shape = g["config_energy_mj"].shape
+        idx = np.indices(shape).reshape(len(shape), -1).T
+        records = []
+        for ix in map(tuple, idx[: args.limit]):
+            rec = {n: labels[n][ix[i]] for i, n in enumerate(names)}
+            rec.update({k: float(v[ix]) for k, v in g.items()})
+            records.append(rec)
+        payload.update({"axes": labels, "size": int(np.prod(shape)), "records": records})
+
+    elif args.kind == "strategies":
+        grid = build_grid(args)
+        res = sweep_batch(grid, jit=args.jit)
+        payload.update(res.to_json_dict(args.limit))
+
+    elif args.kind == "pareto":
+        from repro.core.pareto import config_pareto, strategy_pareto
+
+        devices = _resolve_devices(args.devices)
+        grid = build_grid(args)
+        res = sweep_batch(grid, jit=args.jit)
+        payload.update(
+            {
+                # both frontiers describe the SAME user-selected design space
+                "config_frontier": config_pareto(
+                    devices, buswidths=grid.buswidths, clocks_mhz=grid.clocks_mhz
+                ),
+                "strategy_frontier": strategy_pareto(res, "iw")[: args.limit],
+                "axes": grid.axis_labels(),
+            }
+        )
+
+    else:  # crossover
+        from repro.core.pareto import crossover_surface
+
+        devices = _resolve_devices(args.devices)
+        surf = crossover_surface(
+            paper_lstm_item(),
+            devices,
+            _parse_axis(args.idle_powers),
+            powerup_overhead_mj=em.CALIBRATED_POWERUP_OVERHEAD_MJ if args.calibrated else 0.0,
+        )
+        payload.update(
+            {"axes": surf["axes"], "crossover_ms": surf["crossover_ms"].tolist()}
+        )
+
+    elapsed = time.perf_counter() - t0
+    size = payload.get("size") or len(payload.get("records", [])) or None
+    payload["meta"] = {
+        "elapsed_s": round(elapsed, 6),
+        "points_per_s": round(size / elapsed, 1) if size else None,
+        "jit": bool(args.jit),
+        "calibrated": bool(args.calibrated),
+    }
+
+    text = json.dumps(payload, indent=2)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text)
+        print(
+            f"wrote {args.kind} grid ({size or '?'} points, {elapsed*1e3:.1f} ms) to {args.out}",
+            file=sys.stderr,
+        )
+    else:
+        print(text)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

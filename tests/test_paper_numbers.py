@@ -1,0 +1,131 @@
+"""Golden paper-number regression suite.
+
+One table drives every headline constant of the paper through BOTH
+evaluation paths — the scalar closed forms (`repro.core.energy_model` /
+`config_phase`) and the vectorized batch engine (`repro.core.batch_eval`)
+— so a regression in either path, or a divergence between them, fails
+with the constant's name.
+
+The constants (paper abstract + Exp. 1-3):
+
+    40.13×     worst/best configuration-energy reduction (XC7S15)
+    41.4×      worst/best configuration-time reduction
+    475.56 mJ  worst-case configuration energy (single lane, 3 MHz, raw)
+    11.85 mJ   best-case configuration energy (quad, 66 MHz, compressed)
+    499.06 ms  Idle-Waiting/On-Off crossover with methods 1+2 (24 mW idle)
+    12.39×     Idle-Waiting lifetime ratio at 40 ms under the 4147 J budget
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    BEST_PARAMS,
+    IdlePowerMethod,
+    SPARTAN7_XC7S15,
+    WORST_PARAMS,
+    compare_strategies,
+    energy_reduction_factor,
+    paper_lstm_item,
+    sweep_config_space,
+    time_reduction_factor,
+)
+from repro.core import energy_model as em
+
+CAL = em.CALIBRATED_POWERUP_OVERHEAD_MJ
+IDLE_M12_MW = 24.0  # methods 1+2 idle power (Table 3)
+
+
+# ---------------------------------------------------------------------------
+# the two paths: each maps a quantity name to its computed value
+# ---------------------------------------------------------------------------
+def _scalar_quantities() -> dict:
+    item = paper_lstm_item()
+    pts = sweep_config_space(SPARTAN7_XC7S15)
+    energies = [p.config_energy_mj for p in pts]
+    cmp40 = compare_strategies(
+        item, 40.0, method=IdlePowerMethod.METHOD1_2, powerup_overhead_mj=CAL
+    )
+    return {
+        "config_energy_reduction_x": energy_reduction_factor(SPARTAN7_XC7S15),
+        "config_time_reduction_x": time_reduction_factor(SPARTAN7_XC7S15),
+        "worst_config_energy_mj": max(energies),
+        "best_config_energy_mj": min(energies),
+        "crossover_ms": em.crossover_period_ms(item, IDLE_M12_MW, CAL),
+        "lifetime_ratio_at_40ms": cmp40["lifetime_ratio"],
+    }
+
+
+def _batched_quantities() -> dict:
+    from repro.core.batch_eval import (
+        config_phase_grid,
+        crossover_batch,
+        evaluate_idlewait_batch,
+        evaluate_onoff_batch,
+    )
+
+    item = paper_lstm_item()
+    g = config_phase_grid(SPARTAN7_XC7S15)
+    e = g["config_energy_mj"]
+    t = g["config_time_ms"]
+    iw = evaluate_idlewait_batch(
+        item, np.asarray([40.0]), idle_powers_mw=IDLE_M12_MW, powerup_overhead_mj=CAL
+    )
+    oo = evaluate_onoff_batch(item, np.asarray([40.0]), powerup_overhead_mj=CAL)
+    return {
+        "config_energy_reduction_x": float(e.max() / e.min()),
+        "config_time_reduction_x": float(t.max() / t.min()),
+        "worst_config_energy_mj": float(e.max()),
+        "best_config_energy_mj": float(e.min()),
+        "crossover_ms": float(crossover_batch(item, IDLE_M12_MW, CAL)),
+        "lifetime_ratio_at_40ms": float(iw.lifetime_ms[0] / oo.lifetime_ms[0]),
+    }
+
+
+_PATHS = {"scalar": _scalar_quantities, "batched": _batched_quantities}
+
+#: (quantity, paper value, relative tolerance) — tolerances follow the
+#: pre-existing headline tests (tests/test_system.py).
+GOLDEN = [
+    ("config_energy_reduction_x", 40.13, 5e-3),
+    ("config_time_reduction_x", 41.4, 5e-3),
+    ("worst_config_energy_mj", 475.56, 5e-3),
+    ("best_config_energy_mj", 11.85, 5e-3),
+    ("crossover_ms", 499.06, 1e-3),
+    ("lifetime_ratio_at_40ms", 12.39, 5e-3),
+]
+
+
+@pytest.fixture(scope="module")
+def quantities():
+    return {name: fn() for name, fn in _PATHS.items()}
+
+
+@pytest.mark.parametrize("path", sorted(_PATHS))
+@pytest.mark.parametrize("name,paper_value,rel", GOLDEN)
+def test_headline_constant(quantities, path, name, paper_value, rel):
+    got = quantities[path][name]
+    assert got == pytest.approx(paper_value, rel=rel), (
+        f"{name} via the {path} path drifted from the paper: "
+        f"{got} != {paper_value} (rel {rel})"
+    )
+
+
+@pytest.mark.parametrize("name", [g[0] for g in GOLDEN])
+def test_paths_agree(quantities, name):
+    """The two paths must agree far tighter than the paper tolerance —
+    the batch engine's contract is bit-agreement for these derivations."""
+    s, b = quantities["scalar"][name], quantities["batched"][name]
+    assert b == pytest.approx(s, rel=1e-12, abs=0.0), (
+        f"{name}: batched path {b} diverged from scalar path {s}"
+    )
+
+
+def test_anchor_params_are_the_extremes():
+    """The worst/best anchors are realized exactly at the Table-1 corner
+    settings the paper names (single/3 MHz/raw and quad/66 MHz/compressed)."""
+    dev = SPARTAN7_XC7S15
+    pts = sweep_config_space(dev)
+    worst = max(pts, key=lambda s: s.config_energy_mj)
+    best = min(pts, key=lambda s: s.config_energy_mj)
+    assert worst.params == WORST_PARAMS
+    assert best.params == BEST_PARAMS

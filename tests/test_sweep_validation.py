@@ -1,0 +1,112 @@
+"""Regression tests: sweeps must reject empty/unsorted input grids.
+
+Previously ``Strategy.sweep()`` returned ``[]`` for an empty iterable and
+happily evaluated shuffled grids, and ``sweep_config_space()`` produced an
+empty (or order-scrambled) point list that silently corrupted callers
+indexing by ``itertools.product`` grid order.  All of them now raise
+``ValueError`` with an actionable message.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    IdleWaitingStrategy,
+    OnOffStrategy,
+    SPARTAN7_XC7S15,
+    paper_lstm_item,
+    sweep_config_space,
+)
+from repro.core import energy_model as em
+
+
+@pytest.fixture
+def item():
+    return paper_lstm_item()
+
+
+class TestStrategySweep:
+    @pytest.mark.parametrize("strategy_cls", [OnOffStrategy, IdleWaitingStrategy])
+    def test_empty_periods_raise(self, item, strategy_cls):
+        with pytest.raises(ValueError, match="empty"):
+            strategy_cls(item).sweep([], em.PAPER_ENERGY_BUDGET_MJ)
+
+    @pytest.mark.parametrize("strategy_cls", [OnOffStrategy, IdleWaitingStrategy])
+    def test_unsorted_periods_raise(self, item, strategy_cls):
+        with pytest.raises(ValueError, match="sorted"):
+            strategy_cls(item).sweep([40.0, 20.0, 60.0], em.PAPER_ENERGY_BUDGET_MJ)
+
+    def test_sorted_sweep_still_works(self, item):
+        periods = [40.0, 50.0, 60.0]
+        results = OnOffStrategy(item).sweep(periods, em.PAPER_ENERGY_BUDGET_MJ)
+        assert [r.request_period_ms for r in results] == periods
+        assert all(r.n_max > 0 for r in results)
+
+    def test_duplicate_periods_allowed(self, item):
+        """Equal adjacent periods are sorted; only descents are rejected."""
+        results = OnOffStrategy(item).sweep([40.0, 40.0], em.PAPER_ENERGY_BUDGET_MJ)
+        assert len(results) == 2
+
+    def test_generator_input_accepted(self, item):
+        results = OnOffStrategy(item).sweep(
+            (t for t in (40.0, 80.0)), em.PAPER_ENERGY_BUDGET_MJ
+        )
+        assert len(results) == 2
+
+
+class TestSweepConfigSpace:
+    @pytest.mark.parametrize(
+        "kwargs",
+        [
+            {"buswidths": ()},
+            {"clocks_mhz": ()},
+            {"compression": ()},
+        ],
+        ids=["buswidths", "clocks_mhz", "compression"],
+    )
+    def test_empty_axis_raises(self, kwargs):
+        with pytest.raises(ValueError, match="empty"):
+            sweep_config_space(SPARTAN7_XC7S15, **kwargs)
+
+    def test_unsorted_clocks_raise(self):
+        with pytest.raises(ValueError, match="sorted"):
+            sweep_config_space(SPARTAN7_XC7S15, clocks_mhz=(66, 3))
+
+    def test_unsorted_buswidths_raise(self):
+        with pytest.raises(ValueError, match="sorted"):
+            sweep_config_space(SPARTAN7_XC7S15, buswidths=(4, 1))
+
+    def test_default_grid_still_66_points(self):
+        assert len(sweep_config_space(SPARTAN7_XC7S15)) == 66
+
+
+class TestBatchGridValidation:
+    """The batch engine enforces the same contract as the scalar sweeps."""
+
+    def test_sweep_grid_empty_axis_raises(self):
+        from repro.core.batch_eval import SweepGrid
+
+        with pytest.raises(ValueError, match="empty"):
+            SweepGrid(request_periods_ms=())
+
+    def test_sweep_grid_unsorted_axis_raises(self):
+        from repro.core.batch_eval import SweepGrid
+
+        with pytest.raises(ValueError, match="sorted"):
+            SweepGrid(request_periods_ms=(100.0, 10.0))
+        with pytest.raises(ValueError, match="sorted"):
+            SweepGrid(e_budgets_mj=(2.0, 1.0))
+
+    def test_config_phase_grid_validates(self):
+        from repro.core.batch_eval import config_phase_grid
+
+        with pytest.raises(ValueError, match="empty"):
+            config_phase_grid(SPARTAN7_XC7S15, clocks_mhz=())
+        with pytest.raises(ValueError, match="sorted"):
+            config_phase_grid(SPARTAN7_XC7S15, clocks_mhz=(66, 3))
+
+    def test_cli_range_parsing_sorted(self):
+        from repro.launch.sweep import _parse_axis
+
+        assert _parse_axis("10:40:10") == [10.0, 20.0, 30.0, 40.0]
+        assert _parse_axis("5,7,9") == [5.0, 7.0, 9.0]
+        assert np.all(np.diff(_parse_axis("1:100:0.5")) > 0)
