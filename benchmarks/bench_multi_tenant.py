@@ -2,9 +2,17 @@
 
 Two models with interleaved bursty traffic on ONE slice (with eviction +
 per-tenant ski-rental timeouts) vs each model on its own always-resident
-slice.  Shared slice trades reconfigurations for half the idle floor."""
+slice.  Shared slice trades reconfigurations for half the idle floor.
+
+Second row: the same tenants scaled out — Python-loop scheduling (one
+:class:`MultiTenantScheduler` slice per loop iteration) vs the vectorized
+fleet backend (:mod:`repro.serving.fleet_backend`, every replica in one
+``lax.scan``), compared in devices/sec and recorded into
+``BENCH_fleet.json``."""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import numpy as np
@@ -72,6 +80,83 @@ def run_dedicated(events):
     return s.summary()
 
 
+def fleet_backend_row(
+    n_loop_slices: int = 8,
+    n_replicas: int = 256,
+    bench_path: str = "BENCH_fleet.json",
+) -> tuple[str, float, str]:
+    """Looped scheduler vs vectorized fleet backend, in devices/sec.
+
+    The Python loop steps ``n_loop_slices`` independent two-tenant slices
+    through the bursty event list; the fleet backend runs the same two
+    tenants at ``n_replicas`` replicas each over an equivalent horizon in
+    one scan.  The comparison is merged into ``bench_path``.
+    """
+    from repro.serving.fleet_backend import FleetBackend, FleetTenantSpec
+
+    # ---- Python loop: one MultiTenantScheduler per simulated slice ---------
+    rng = np.random.default_rng(0)
+    events = traffic(rng)
+    horizon_s = float(sum(gap for _, gap in events))
+    t0 = time.perf_counter()
+    for _ in range(n_loop_slices):
+        run_shared(events, budget_gb=16.0)
+    loop_elapsed = time.perf_counter() - t0
+    loop_dev_per_s = n_loop_slices / loop_elapsed if loop_elapsed else float("inf")
+
+    # ---- fleet backend: same tenants, replicated, one lax.scan -------------
+    per_tenant_events = len(events) / 2
+    tenants = [
+        FleetTenantSpec(
+            name=name,
+            config_mw=300.0, config_s=0.5,
+            infer_mw=170.0, infer_s=0.01,
+            idle_mw=100.0,
+            policy="auto",
+            replicas=n_replicas,
+            mean_period_ms=horizon_s * 1000.0 / per_tenant_events,
+            e_budget_mj=1e9,
+        )
+        for name in ("a", "b")
+    ]
+    backend = FleetBackend(tenants)
+    backend.run(horizon_ms=horizon_s * 1000.0, dt_ms=250.0, seed=0)  # warm-up
+    t0 = time.perf_counter()
+    summary = backend.run(horizon_ms=horizon_s * 1000.0, dt_ms=250.0, seed=0)
+    fleet_elapsed = time.perf_counter() - t0
+    fleet_dev_per_s = backend.n_devices / fleet_elapsed if fleet_elapsed else float("inf")
+    speedup = fleet_dev_per_s / loop_dev_per_s if loop_dev_per_s else float("inf")
+
+    record = {
+        "loop_slices": n_loop_slices,
+        "loop_elapsed_s": round(loop_elapsed, 6),
+        "loop_devices_per_s": round(loop_dev_per_s, 1),
+        "fleet_devices": backend.n_devices,
+        "fleet_elapsed_s": round(fleet_elapsed, 6),
+        "fleet_devices_per_s": round(fleet_dev_per_s, 1),
+        "speedup_devices_per_s": round(speedup, 1),
+        "fleet_served": summary["fleet"]["requests"]["served"],
+    }
+    # merge into the fleet bench artifact rather than clobbering it
+    payload = {}
+    if os.path.exists(bench_path):
+        try:
+            with open(bench_path) as f:
+                payload = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            payload = {}
+    payload["bench_multi_tenant_fleet_backend"] = record
+    with open(bench_path, "w") as f:
+        json.dump(payload, f, indent=2)
+
+    return (
+        "multi_tenant_fleet_backend",
+        fleet_elapsed * 1e6 / max(backend.n_devices, 1),
+        f"fleet={fleet_dev_per_s:.0f} dev/s vs loop={loop_dev_per_s:.1f} dev/s "
+        f"({speedup:.0f}x, {backend.n_devices} replicas in one scan)",
+    )
+
+
 def rows() -> list[tuple[str, float, str]]:
     rng = np.random.default_rng(0)
     events = traffic(rng)
@@ -87,5 +172,6 @@ def rows() -> list[tuple[str, float, str]]:
             f"(cfg={shared['configurations']}, evict={shared['evictions']}) "
             f"dedicated={dedicated['energy_mj']:.0f}mJ "
             f"ratio={shared['energy_mj']/dedicated['energy_mj']:.2f}",
-        )
+        ),
+        fleet_backend_row(),
     ]

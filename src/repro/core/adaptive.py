@@ -319,6 +319,28 @@ class PolicyController:
 
 
 @dataclasses.dataclass(frozen=True)
+class FixedTimeoutPolicy:
+    """A constant idle-timeout policy with the simulate_trace interface —
+    e.g. the ski-rental break-even arm (:func:`break_even_timeout_ms`) as a
+    standalone policy, the scalar oracle for the fleet kernel's 'adaptive'
+    devices."""
+
+    timeout_ms: float
+    idle_power_mw: float
+    kind: str = "fixed_timeout"
+
+    def __post_init__(self):
+        if self.timeout_ms < 0:
+            raise ValueError(f"timeout must be non-negative, got {self.timeout_ms}")
+
+    def observe_gap(self, gap_ms: float) -> None:
+        pass
+
+    def idle_timeout_ms(self) -> float:
+        return self.timeout_ms
+
+
+@dataclasses.dataclass(frozen=True)
 class StaticPolicy:
     """A fixed-timeout policy with the simulate_trace interface: 'on_off'
     releases immediately, 'idle_waiting' never releases."""

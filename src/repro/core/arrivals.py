@@ -16,6 +16,12 @@ and the live serving layer (:mod:`repro.serving.scheduler`) consume:
 All processes are seeded and deterministic: the same ``(process, n, seed)``
 triple always yields the same stream.  Times are milliseconds, matching
 :mod:`repro.core.phases`; the first request arrives at t = 0.
+
+Fleet-scale vectorization (:mod:`repro.fleet`): :meth:`ArrivalProcess.
+sample_batch` draws **one independent stream per device** as a padded JAX
+array in a single ``jax.random`` call chain — no Python loop over devices —
+and :func:`bin_arrival_counts` histograms those streams onto the fleet
+stepper's global tick grid.
 """
 from __future__ import annotations
 
@@ -25,6 +31,10 @@ import math
 from typing import Sequence, Union
 
 import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import enable_x64
 
 
 class ArrivalProcess:
@@ -48,6 +58,64 @@ class ArrivalProcess:
         """Expected inter-arrival gap (ms)."""
         raise NotImplementedError
 
+    # ---- vectorized batch sampling (fleet substrate) ------------------------
+    def _batch_gaps(self, key, n_devices: int, n_gaps: int) -> jnp.ndarray:
+        """``(n_devices, n_gaps)`` float64 inter-arrival gaps, one
+        independent stream per row.  Subclasses override; must be free of
+        Python loops over devices or gaps."""
+        raise NotImplementedError(
+            f"{type(self).__name__} has no vectorized batch sampler"
+        )
+
+    def sample_batch(
+        self,
+        key,
+        n_devices: int,
+        horizon_ms: float,
+        max_arrivals: int | None = None,
+        include_origin: bool = True,
+    ) -> jnp.ndarray:
+        """``(n_devices, M)`` float64 **arrival times** (ms), one stream per
+        device, padded with ``+inf`` past the horizon.
+
+        Each stream starts at exactly 0.0 (the scalar convention); pass
+        ``include_origin=False`` to drop that deterministic first arrival
+        (e.g. for thinned per-replica streams, where a synchronized t=0
+        request on every device would be an artifact).  ``M`` is
+        ``max_arrivals`` or a mean-rate estimate with headroom; streams that
+        would exceed ``M`` arrivals inside the horizon are truncated at
+        ``M`` (raise ``max_arrivals`` for heavy-tailed processes).  Seeded
+        by a ``jax.random`` key: the same key always yields the same batch,
+        and different rows are independent.
+        """
+        if n_devices <= 0:
+            raise ValueError(f"n_devices must be positive, got {n_devices}")
+        if not horizon_ms > 0:
+            raise ValueError(f"horizon_ms must be positive, got {horizon_ms}")
+        mean = self.mean_period_ms()
+        if max_arrivals is None:
+            # mean-rate estimate + 4·sqrt headroom for stochastic streams
+            est = horizon_ms / mean
+            max_arrivals = int(est + 4.0 * math.sqrt(est) + 8.0)
+        if max_arrivals < 1:
+            raise ValueError(f"max_arrivals must be ≥ 1, got {max_arrivals}")
+        with enable_x64():
+            if include_origin:
+                gaps = self._batch_gaps(key, n_devices, max_arrivals - 1)
+                times = jnp.concatenate(
+                    [
+                        jnp.zeros((n_devices, 1), dtype=jnp.float64),
+                        jnp.cumsum(gaps, axis=1),
+                    ],
+                    axis=1,
+                )
+            else:
+                gaps = self._batch_gaps(key, n_devices, max_arrivals)
+                times = jnp.cumsum(gaps, axis=1)
+            # half-open horizon [0, horizon_ms): consistent with
+            # bin_arrival_counts, which bins ticks [k·dt, (k+1)·dt)
+            return jnp.where(times < horizon_ms, times, jnp.inf)
+
 
 @dataclasses.dataclass(frozen=True)
 class DeterministicArrivals(ArrivalProcess):
@@ -65,6 +133,9 @@ class DeterministicArrivals(ArrivalProcess):
 
     def mean_period_ms(self) -> float:
         return self.period_ms
+
+    def _batch_gaps(self, key, n_devices: int, n_gaps: int) -> jnp.ndarray:
+        return jnp.full((n_devices, n_gaps), self.period_ms, dtype=jnp.float64)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,6 +155,12 @@ class PoissonArrivals(ArrivalProcess):
 
     def mean_period_ms(self) -> float:
         return self.mean_ms
+
+    def _batch_gaps(self, key, n_devices: int, n_gaps: int) -> jnp.ndarray:
+        return (
+            jax.random.exponential(key, (n_devices, n_gaps), dtype=jnp.float64)
+            * self.mean_ms
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -125,6 +202,26 @@ class MMPPArrivals(ArrivalProcess):
         # stationary fraction of arrivals in each state ∝ mean dwell length
         b, q = self.mean_burst_len, self.mean_quiet_len
         return (b * self.burst_ms + q * self.quiet_ms) / (b + q)
+
+    def _batch_gaps(self, key, n_devices: int, n_gaps: int) -> jnp.ndarray:
+        # Same 2-state chain as the scalar generator, but the per-arrival
+        # state flips run as a lax.scan over the gap index with every device
+        # advanced in parallel (the chain is sequential in i, never in d).
+        k_exp, k_flip = jax.random.split(key)
+        u_exp = jax.random.exponential(k_exp, (n_gaps, n_devices), dtype=jnp.float64)
+        u_flip = jax.random.uniform(k_flip, (n_gaps, n_devices), dtype=jnp.float64)
+        p_b = 1.0 / self.mean_burst_len
+        p_q = 1.0 / self.mean_quiet_len
+
+        def step(in_burst, u):
+            ue, uf = u
+            gap = ue * jnp.where(in_burst, self.burst_ms, self.quiet_ms)
+            flip = uf < jnp.where(in_burst, p_b, p_q)
+            return in_burst ^ flip, gap
+
+        in_burst0 = jnp.ones((n_devices,), dtype=bool)
+        _, gaps = jax.lax.scan(step, in_burst0, (u_exp, u_flip))
+        return gaps.T
 
 
 @dataclasses.dataclass(frozen=True)
@@ -182,6 +279,42 @@ class TraceArrivals(ArrivalProcess):
     def record(process: ArrivalProcess, n: int, seed: int = 0) -> "TraceArrivals":
         """Snapshot another process into a replayable trace."""
         return TraceArrivals(tuple(process.inter_arrival_times(n, seed).tolist()))
+
+
+def bin_arrival_counts(
+    times_ms,
+    horizon_ms: float,
+    dt_ms: float,
+) -> jnp.ndarray:
+    """Histogram per-device arrival times onto the fleet tick grid.
+
+    ``times_ms`` is ``(n_devices, M)`` (e.g. from
+    :meth:`ArrivalProcess.sample_batch`; ``+inf`` padding is ignored).
+    Returns ``(n_steps, n_devices)`` int32 counts with
+    ``n_steps = ceil(horizon_ms / dt_ms)`` — the ``arrivals`` input of
+    :func:`repro.fleet.step.run_routed` with ``router=None``.
+    """
+    if not dt_ms > 0:
+        raise ValueError(f"dt_ms must be positive, got {dt_ms}")
+    if not horizon_ms > 0:
+        raise ValueError(f"horizon_ms must be positive, got {horizon_ms}")
+    n_steps = int(math.ceil(horizon_ms / dt_ms))
+    with enable_x64():
+        t = jnp.asarray(times_ms, dtype=jnp.float64)
+        if t.ndim != 2:
+            raise ValueError(f"times_ms must be (n_devices, M), got shape {t.shape}")
+        n_devices = t.shape[0]
+        valid = jnp.isfinite(t) & (t >= 0) & (t < n_steps * dt_ms)
+        step_idx = jnp.clip(
+            jnp.floor(t / dt_ms).astype(jnp.int32), 0, n_steps - 1
+        )
+        dev_idx = jnp.broadcast_to(
+            jnp.arange(n_devices, dtype=jnp.int32)[:, None], t.shape
+        )
+        counts = jnp.zeros((n_steps, n_devices), dtype=jnp.int32)
+        return counts.at[step_idx.ravel(), dev_idx.ravel()].add(
+            valid.ravel().astype(jnp.int32)
+        )
 
 
 def make_process(kind: str, **kwargs) -> ArrivalProcess:

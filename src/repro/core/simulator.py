@@ -117,6 +117,18 @@ def simulate(
     budget = spec.workload.energy_budget_mj
     t_req = spec.workload.request_period_ms
 
+    # Fail loudly on nonsense inputs rather than silently reporting a wrong
+    # zero/garbage lifetime (negative periods previously fell through the
+    # infeasibility branch; NaN/inf propagated into the closed forms).
+    if not math.isfinite(t_req) or t_req <= 0:
+        raise ValueError(
+            f"request_period_ms must be positive and finite, got {t_req}"
+        )
+    if not math.isfinite(budget) or budget < 0:
+        raise ValueError(
+            f"energy_budget_mj must be non-negative and finite, got {budget}"
+        )
+
     if t_req < strategy.min_request_period_ms():
         res = SimResult(
             strategy=strategy.name,
@@ -313,7 +325,34 @@ def simulate_trace(
       remaining budget;
     * the first item always pays the initial configuration (E_init).
     """
-    arrivals = list(arrival_times_ms)
+    # Validate the trace up front: a negative or non-monotonic timestamp
+    # would silently corrupt the idle-gap accounting (gaps are differences
+    # of consecutive arrivals), producing wrong energy totals.  Timestamps
+    # are coerced through float() so numpy/jax scalar elements are accepted.
+    arrivals = []
+    prev = None
+    for i, a in enumerate(arrival_times_ms):
+        try:
+            if isinstance(a, (str, bytes)):
+                raise TypeError
+            a = float(a)
+        except (TypeError, ValueError):
+            raise ValueError(
+                f"arrival_times_ms[{i}] = {a!r}: trace timestamps must be "
+                "numbers (ms)"
+            ) from None
+        if not math.isfinite(a) or a < 0:
+            raise ValueError(
+                f"arrival_times_ms[{i}] = {a!r}: trace timestamps must be "
+                "finite, non-negative numbers (ms)"
+            )
+        if prev is not None and a < prev:
+            raise ValueError(
+                f"arrival_times_ms[{i}] = {a} is earlier than its "
+                f"predecessor {prev}: trace timestamps must be non-decreasing"
+            )
+        prev = a
+        arrivals.append(a)
     name = policy_name or getattr(policy, "kind", type(policy).__name__)
     budget = e_budget_mj
     eps = 1e-9

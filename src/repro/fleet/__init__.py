@@ -1,0 +1,50 @@
+"""Fleet-scale vectorized simulation: thousands of duty-cycled accelerators,
+routed traffic, and per-device power policies in one ``jax.lax.scan``.
+
+Layers (see ``docs/fleet_sim.md``):
+
+* :mod:`repro.fleet.state`   — stacked per-device parameter/state pytrees;
+* :mod:`repro.fleet.step`    — periodic (oracle-exact) and routed kernels;
+* :mod:`repro.fleet.router`  — round-robin / least-loaded / power-aware;
+* :mod:`repro.fleet.metrics` — lifetimes, p50/p99 latency, energy/request.
+"""
+from repro.fleet.metrics import (
+    devices_alive_curve,
+    fleet_summary,
+    latency_percentiles,
+    periodic_summary,
+    routed_summary,
+)
+from repro.fleet.router import ROUTER_CODES, route_counts
+from repro.fleet.state import (
+    STRATEGY_CODES,
+    DeviceSpec,
+    FleetParams,
+    FleetState,
+    uniform_fleet,
+)
+from repro.fleet.step import (
+    PeriodicFleetResult,
+    RoutedFleetResult,
+    run_periodic,
+    run_routed,
+)
+
+__all__ = [
+    "ROUTER_CODES",
+    "STRATEGY_CODES",
+    "DeviceSpec",
+    "FleetParams",
+    "FleetState",
+    "PeriodicFleetResult",
+    "RoutedFleetResult",
+    "devices_alive_curve",
+    "fleet_summary",
+    "latency_percentiles",
+    "periodic_summary",
+    "routed_summary",
+    "route_counts",
+    "run_periodic",
+    "run_routed",
+    "uniform_fleet",
+]

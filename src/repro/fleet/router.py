@@ -1,0 +1,81 @@
+"""Routing policies: distribute a global request stream across the fleet.
+
+A router is a **pure function** from (requests this tick, observable fleet
+state) to per-device arrival counts — no Python loops over devices, so it
+runs inside the ``lax.scan`` step.  All policies share one shape:
+
+* every *alive* device receives ``base = r // n_alive`` requests;
+* the remainder ``r mod n_alive`` goes one request each to the ``rem``
+  highest-priority devices (a water-filling approximation of sequential
+  dispatch — exact for round-robin, one-request-per-device greedy for the
+  stateful policies);
+* dead devices receive nothing (their share is dropped at the gate and
+  counted by the caller).
+
+Priorities (lower cost = served first):
+
+    round_robin   cost = (device_index − rr_ptr) mod N; the pointer advances
+                  by the remainder each tick, so extras rotate fairly.
+    least_loaded  cost = queue depth (ties broken by device index, stable).
+    power_aware   cost = energy already spent ÷ budget — requests flow to the
+                  devices with the most *remaining* energy, equalizing
+                  depletion so the fleet's devices-alive curve falls as a
+                  cliff instead of a slope.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["ROUTER_CODES", "route_counts"]
+
+#: Router names → integer codes (static argument of the jitted step).
+ROUTER_CODES = {"round_robin": 0, "least_loaded": 1, "power_aware": 2}
+
+
+def route_counts(
+    n_requests: jnp.ndarray,
+    router_code: int,
+    alive: jnp.ndarray,
+    q_len: jnp.ndarray,
+    energy_mj: jnp.ndarray,
+    e_budget_mj: jnp.ndarray,
+    rr_ptr: jnp.ndarray,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Split ``n_requests`` (scalar int) across devices.
+
+    Returns ``(counts, rr_ptr_next)``; ``counts`` sums to ``n_requests``
+    when any device is alive, else to 0 (the caller records the rest as
+    dropped).  ``router_code`` is a *static* Python int (one of
+    :data:`ROUTER_CODES`), so the priority permutation specializes at trace
+    time: round-robin is sort-free (a rotation), the stateful policies pay
+    one stable argsort.
+    """
+    n = alive.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    if router_code == ROUTER_CODES["round_robin"]:
+        # perm[p] = device served p-th: rr_ptr, rr_ptr+1, … (no sort needed)
+        perm = (idx + rr_ptr) % n
+    else:
+        if router_code == ROUTER_CODES["least_loaded"]:
+            cost = q_len
+        elif router_code == ROUTER_CODES["power_aware"]:
+            cost = energy_mj / jnp.maximum(e_budget_mj, 1e-30)
+        else:
+            raise ValueError(f"unknown router code {router_code}")
+        perm = jnp.argsort(cost, stable=True).astype(jnp.int32)
+    alive_perm = alive[perm]
+    # rank among *alive* devices at each permuted position (exclusive scan)
+    rank_perm = jnp.cumsum(alive_perm) - alive_perm
+    n_alive = jnp.sum(alive).astype(jnp.int64)
+    r = jnp.asarray(n_requests, dtype=jnp.int64)
+    base = jnp.where(n_alive > 0, r // jnp.maximum(n_alive, 1), 0)
+    rem = jnp.where(n_alive > 0, r - base * n_alive, 0)
+    extras_perm = alive_perm & (rank_perm < rem)
+    extras = jnp.zeros((n,), dtype=jnp.int32).at[perm].set(extras_perm.astype(jnp.int32))
+    counts = jnp.where(alive, base.astype(jnp.int32) + extras, 0)
+    rr_next = (
+        ((rr_ptr + rem) % n).astype(jnp.int32)
+        if router_code == ROUTER_CODES["round_robin"]
+        else rr_ptr
+    )
+    return counts, rr_next

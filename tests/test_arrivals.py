@@ -105,3 +105,140 @@ class TestFactory:
     def test_unknown_kind_raises(self):
         with pytest.raises(ValueError):
             make_process("fractal")
+
+
+class TestSampleBatch:
+    """Vectorized per-device streams (fleet substrate): jax.random-seeded,
+    padded, statistically consistent with the scalar generators."""
+
+    def test_deterministic_exact_grid(self):
+        import jax
+
+        # half-open horizon [0, 200): t = 200 is excluded, matching the
+        # bin_arrival_counts tick grid
+        t = DeterministicArrivals(40.0).sample_batch(jax.random.PRNGKey(0), 3, 200.0)
+        finite = np.isfinite(np.asarray(t))
+        for row in np.asarray(t):
+            np.testing.assert_allclose(row[np.isfinite(row)], [0, 40, 80, 120, 160])
+        assert finite.sum() == 3 * 5
+
+    def test_horizon_boundary_consistent_with_binning(self):
+        import jax
+
+        from repro.core.arrivals import bin_arrival_counts
+
+        # period divides the horizon: every sampled arrival must land in a bin
+        t = DeterministicArrivals(40.0).sample_batch(jax.random.PRNGKey(0), 2, 200.0)
+        c = bin_arrival_counts(t, 200.0, 40.0)
+        assert int(np.asarray(c).sum()) == int(np.isfinite(np.asarray(t)).sum())
+
+    def test_first_arrival_at_zero_and_inf_padding(self):
+        import jax
+
+        for proc in (DeterministicArrivals(10.0), PoissonArrivals(10.0),
+                     MMPPArrivals(5.0, 100.0)):
+            t = np.asarray(proc.sample_batch(jax.random.PRNGKey(3), 4, 100.0))
+            assert np.all(t[:, 0] == 0.0)
+            assert np.all(np.isinf(t[~np.isfinite(t)]))
+            # finite times are sorted and within the horizon
+            for row in t:
+                fin = row[np.isfinite(row)]
+                assert np.all(np.diff(fin) >= 0)
+                assert fin.max() <= 100.0
+
+    def test_same_key_same_batch_and_rows_independent(self):
+        import jax
+
+        proc = PoissonArrivals(25.0)
+        key = jax.random.PRNGKey(7)
+        a = np.asarray(proc.sample_batch(key, 8, 1000.0))
+        b = np.asarray(proc.sample_batch(key, 8, 1000.0))
+        np.testing.assert_array_equal(a, b)
+        assert not np.array_equal(a[0], a[1])
+
+    def test_poisson_mean_matches_scalar_statistics(self):
+        import jax
+
+        proc = PoissonArrivals(25.0)
+        t = np.asarray(proc.sample_batch(jax.random.PRNGKey(0), 512, 20_000.0))
+        with np.errstate(invalid="ignore"):    # inf padding → nan diffs
+            gaps = np.diff(t, axis=1)
+        gaps = gaps[np.isfinite(gaps)]
+        scalar = np.concatenate(
+            [proc.inter_arrival_times(400, seed=s) for s in range(4)]
+        )
+        assert np.mean(gaps) == pytest.approx(np.mean(scalar), rel=0.05)
+        assert np.mean(gaps) == pytest.approx(proc.mean_period_ms(), rel=0.05)
+
+    def test_mmpp_mean_and_burstiness_match_scalar(self):
+        import jax
+
+        proc = MMPPArrivals(burst_ms=5.0, quiet_ms=500.0)
+        t = np.asarray(proc.sample_batch(jax.random.PRNGKey(1), 512, 50_000.0,
+                                         max_arrivals=2048))
+        with np.errstate(invalid="ignore"):    # inf padding → nan diffs
+            gaps = np.diff(t, axis=1)
+        gaps = gaps[np.isfinite(gaps)]
+        scalar = np.concatenate(
+            [proc.inter_arrival_times(1000, seed=s) for s in range(8)]
+        )
+        # horizon censoring clips the longest quiet gaps → generous band
+        assert np.mean(gaps) == pytest.approx(np.mean(scalar), rel=0.15)
+        # bursty: CV well above Poisson's 1 in both samplers
+        assert np.std(gaps) / np.mean(gaps) > 1.5
+        assert np.std(scalar) / np.mean(scalar) > 1.5
+
+    def test_include_origin_false_drops_synchronized_start(self):
+        import jax
+
+        t = np.asarray(PoissonArrivals(50.0).sample_batch(
+            jax.random.PRNGKey(2), 16, 1000.0, include_origin=False))
+        assert not np.any(t[:, 0] == 0.0)
+
+    def test_invalid_args_rejected(self):
+        import jax
+
+        proc = PoissonArrivals(10.0)
+        with pytest.raises(ValueError):
+            proc.sample_batch(jax.random.PRNGKey(0), 0, 100.0)
+        with pytest.raises(ValueError):
+            proc.sample_batch(jax.random.PRNGKey(0), 1, -5.0)
+        with pytest.raises(NotImplementedError):
+            TraceArrivals((1.0,)).sample_batch(jax.random.PRNGKey(0), 1, 100.0)
+
+
+class TestBinArrivalCounts:
+    def test_counts_match_histogram(self):
+        from repro.core.arrivals import bin_arrival_counts
+
+        times = np.array([[0.0, 10.0, 39.9, 40.0, 75.0, np.inf]])
+        c = np.asarray(bin_arrival_counts(times, 80.0, 40.0))
+        assert c.shape == (2, 1)
+        np.testing.assert_array_equal(c[:, 0], [3, 2])
+
+    def test_inf_padding_and_out_of_horizon_ignored(self):
+        from repro.core.arrivals import bin_arrival_counts
+
+        times = np.array([[0.0, 500.0, np.inf], [20.0, 79.9, np.inf]])
+        c = np.asarray(bin_arrival_counts(times, 80.0, 40.0))
+        assert int(c.sum()) == 3
+        np.testing.assert_array_equal(c, [[1, 1], [0, 1]])
+
+    def test_total_conservation_with_sampler(self):
+        import jax
+
+        from repro.core.arrivals import bin_arrival_counts
+
+        proc = PoissonArrivals(30.0)
+        t = proc.sample_batch(jax.random.PRNGKey(5), 32, 5000.0)
+        c = bin_arrival_counts(t, 5000.0, 10.0)
+        finite = np.isfinite(np.asarray(t)) & (np.asarray(t) < 5000.0)
+        assert int(np.asarray(c).sum()) == int(finite.sum())
+
+    def test_invalid_args(self):
+        from repro.core.arrivals import bin_arrival_counts
+
+        with pytest.raises(ValueError):
+            bin_arrival_counts(np.zeros((2, 3)), 100.0, 0.0)
+        with pytest.raises(ValueError):
+            bin_arrival_counts(np.zeros(3), 100.0, 10.0)

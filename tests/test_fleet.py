@@ -1,0 +1,214 @@
+"""Fleet periodic kernel vs the scalar ``simulate()`` oracle.
+
+The contract under test (ISSUE 3 acceptance): an N=1 fleet with a trivial
+router reproduces the scalar oracle *bit-tight* — identical item counts and
+energies within 1e-9 (in practice exactly 0.0) — across all three
+strategies, and a mixed fleet under the paper's 4147 J budget at T = 40 ms
+reproduces the 12.39× Idle-Waiting/On-Off lifetime ratio per device.
+"""
+import numpy as np
+import pytest
+
+from repro.core import energy_model as em
+from repro.core.adaptive import AdaptiveStrategy
+from repro.core.phases import paper_lstm_item
+from repro.core.simulator import simulate
+from repro.core.strategies import IdlePowerMethod
+from repro.core.workload import ExperimentSpec, WorkloadSpec
+from repro.fleet import (
+    DeviceSpec,
+    FleetParams,
+    run_periodic,
+    uniform_fleet,
+)
+
+CAL = em.CALIBRATED_POWERUP_OVERHEAD_MJ
+
+
+@pytest.fixture(scope="module")
+def item():
+    return paper_lstm_item()
+
+
+def _experiment(strategy, period, budget_j, method=IdlePowerMethod.BASELINE):
+    return ExperimentSpec(
+        workload=WorkloadSpec(budget_j, period),
+        item=paper_lstm_item(),
+        strategy_kind=strategy,
+        method=method,
+        powerup_overhead_mj=CAL,
+    )
+
+
+class TestOracleAgreementN1:
+    """N=1 fleet == scalar simulate(), exactly."""
+
+    # scaled budget keeps n_max in the tens of thousands → fast scans
+    BUDGET_J = 41.47
+
+    @pytest.mark.parametrize("strategy", ["on_off", "idle_waiting"])
+    @pytest.mark.parametrize("period", [40.0, 89.0, 120.0])
+    @pytest.mark.parametrize(
+        "method", [IdlePowerMethod.BASELINE, IdlePowerMethod.METHOD1_2],
+        ids=["baseline", "m12"],
+    )
+    def test_static_strategies(self, strategy, period, method):
+        spec = _experiment(strategy, period, self.BUDGET_J, method)
+        oracle = simulate(spec)
+        fleet = run_periodic(
+            FleetParams.from_specs([DeviceSpec.from_experiment(spec)]),
+            n_steps=oracle.n_items + 10,
+        )
+        assert int(fleet.n_items[0]) == oracle.n_items
+        assert abs(float(fleet.energy_mj[0]) - oracle.energy_used_mj) <= 1e-9
+        assert float(fleet.lifetime_ms[0]) == oracle.lifetime_ms
+        assert not fleet.alive[0]          # budget exhausted before horizon
+
+    @pytest.mark.parametrize("period", [40.0, 300.0, 600.0])
+    def test_adaptive_matches_analytical_controller(self, item, period):
+        """Fleet 'adaptive' devices equal AdaptiveStrategy.evaluate (which
+        is itself bit-identical to the winning static arm)."""
+        budget_mj = self.BUDGET_J * 1000.0
+        ref = AdaptiveStrategy(item, CAL, method=IdlePowerMethod.METHOD1_2).evaluate(
+            period, budget_mj
+        )
+        spec = DeviceSpec(
+            item,
+            strategy="adaptive",
+            method=IdlePowerMethod.METHOD1_2,
+            request_period_ms=period,
+            e_budget_mj=budget_mj,
+            powerup_overhead_mj=CAL,
+        )
+        fleet = run_periodic(FleetParams.from_specs([spec]), n_steps=ref.n_max + 10)
+        assert int(fleet.n_items[0]) == ref.n_max
+        assert float(fleet.lifetime_ms[0]) == ref.lifetime_ms
+
+    def test_infeasible_period_serves_nothing(self, item):
+        # below the execution latency even Idle-Waiting is infeasible
+        spec = DeviceSpec(item, strategy="idle_waiting", request_period_ms=0.01)
+        fleet = run_periodic(FleetParams.from_specs([spec]), n_steps=100)
+        assert int(fleet.n_items[0]) == 0
+        assert float(fleet.energy_mj[0]) == 0.0
+
+    def test_horizon_truncation(self, item):
+        spec = _experiment("idle_waiting", 40.0, self.BUDGET_J)
+        oracle = simulate(spec)
+        fleet = run_periodic(
+            FleetParams.from_specs([DeviceSpec.from_experiment(spec)]),
+            n_steps=oracle.n_items // 2,
+        )
+        assert int(fleet.n_items[0]) == oracle.n_items // 2
+        assert fleet.alive[0]              # would keep serving past horizon
+
+
+class TestHeterogeneousFleet:
+    def test_stacked_devices_each_match_their_own_oracle(self):
+        """A mixed fleet (strategies × methods × periods × budgets) agrees
+        device-by-device with per-device scalar runs."""
+        cases = [
+            ("on_off", 40.0, 20.0, IdlePowerMethod.BASELINE),
+            ("idle_waiting", 40.0, 20.0, IdlePowerMethod.BASELINE),
+            ("idle_waiting", 89.0, 41.47, IdlePowerMethod.METHOD1),
+            ("idle_waiting", 120.0, 10.0, IdlePowerMethod.METHOD1_2),
+            ("on_off", 500.0, 41.47, IdlePowerMethod.BASELINE),
+            ("idle_waiting", 500.0, 41.47, IdlePowerMethod.METHOD1_2),
+        ]
+        specs = [
+            DeviceSpec.from_experiment(_experiment(s, t, b, m))
+            for (s, t, b, m) in cases
+        ]
+        oracles = [simulate(_experiment(s, t, b, m)) for (s, t, b, m) in cases]
+        n_steps = max(o.n_items for o in oracles) + 10
+        fleet = run_periodic(FleetParams.from_specs(specs), n_steps=n_steps)
+        for d, oracle in enumerate(oracles):
+            assert int(fleet.n_items[d]) == oracle.n_items, cases[d]
+            assert abs(float(fleet.energy_mj[d]) - oracle.energy_used_mj) <= 1e-9, cases[d]
+
+    def test_tile_repeats_template(self, item):
+        tmpl = uniform_fleet(3, item=item, strategies=("on_off", "idle_waiting", "adaptive"))
+        tiled = tmpl.tile(8)
+        assert tiled.n_devices == 8
+        np.testing.assert_array_equal(
+            np.asarray(tiled.strategy), np.asarray(tmpl.strategy)[[0, 1, 2, 0, 1, 2, 0, 1]]
+        )
+
+    def test_alive_over_time_is_monotone_nonincreasing(self, item):
+        params = uniform_fleet(
+            16, item=item, strategies=("on_off", "idle_waiting"),
+            e_budget_mj=500.0, powerup_overhead_mj=CAL,
+        )
+        res = run_periodic(params, n_steps=2000)
+        diffs = np.diff(res.alive_over_time.astype(int))
+        assert np.all(diffs <= 0)
+        assert res.alive_over_time[-1] == np.sum(res.alive)
+
+
+class TestPaperProperty1239x:
+    def test_fleet_reproduces_12_39x_per_device(self, item):
+        """ISSUE property: a fleet under the paper's 4147 J budget at
+        T = 40 ms shows the 12.39× Idle-Waiting(m1+2)/On-Off item and
+        lifetime ratio on every device pair."""
+        params = uniform_fleet(
+            8,
+            item=item,
+            strategies=("on_off", "idle_waiting"),
+            method=IdlePowerMethod.METHOD1_2,
+            request_period_ms=40.0,
+            e_budget_mj=em.PAPER_ENERGY_BUDGET_MJ,
+            powerup_overhead_mj=CAL,
+        )
+        # enough steps for the Idle-Waiting devices to exhaust the budget
+        res = run_periodic(params, n_steps=4_400_000)
+        assert not res.alive.any()
+        n = res.n_items
+        for d in range(0, 8, 2):
+            ratio = n[d + 1] / n[d]        # idle_waiting / on_off
+            assert ratio == pytest.approx(12.39, rel=5e-3)
+            lifetime_ratio = res.lifetime_ms[d + 1] / res.lifetime_ms[d]
+            assert lifetime_ratio == pytest.approx(12.39, rel=5e-3)
+        # and the counts equal the closed-form oracle's
+        assert n[0] == em.onoff_n_max(item, powerup_overhead_mj=CAL)
+        assert n[1] == em.idlewait_n_max(
+            item, 40.0, idle_power_mw=24.0, powerup_overhead_mj=CAL
+        )
+
+
+class TestAcceptanceScale:
+    def test_4096_devices_10s_horizon_single_scan(self, item):
+        """ISSUE acceptance: ≥ 4096 devices over a ≥ 10 s horizon in one
+        lax.scan (250 periods of 40 ms), no per-device Python loop."""
+        params = uniform_fleet(
+            4096, item=item,
+            strategies=("on_off", "idle_waiting", "adaptive"),
+            method=IdlePowerMethod.METHOD1_2,
+            powerup_overhead_mj=CAL,
+        )
+        res = run_periodic(params, n_steps=250)   # 250 × 40 ms = 10 s
+        assert res.n_items.shape == (4096,)
+        # paper budget: every device survives a 10 s horizon and serves
+        # every request
+        assert np.all(res.n_items == 250)
+        assert res.alive.all()
+
+
+class TestDeviceSpecValidation:
+    def test_unknown_strategy(self, item):
+        with pytest.raises(ValueError, match="unknown strategy"):
+            DeviceSpec(item, strategy="mystery")
+
+    def test_nonpositive_period(self, item):
+        with pytest.raises(ValueError, match="period"):
+            DeviceSpec(item, request_period_ms=0.0)
+
+    def test_negative_budget(self, item):
+        with pytest.raises(ValueError, match="budget"):
+            DeviceSpec(item, e_budget_mj=-1.0)
+
+    def test_empty_fleet(self):
+        with pytest.raises(ValueError, match="at least one device"):
+            FleetParams.from_specs([])
+
+    def test_negative_steps(self, item):
+        with pytest.raises(ValueError, match="n_steps"):
+            run_periodic(FleetParams.from_specs([DeviceSpec(item)]), n_steps=-1)

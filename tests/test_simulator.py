@@ -4,6 +4,7 @@ The paper validated its simulator against hardware to within 2.8%; we
 validate our discrete-event simulator against the closed-form model exactly
 (they implement the same equations through different mechanisms).
 """
+import numpy as np
 import pytest
 
 from repro.core import (
@@ -126,3 +127,78 @@ class TestYamlRoundTrip:
             "inference",
             "data_offloading",
         }
+
+
+from repro.core.simulator import simulate_trace  # noqa: E402
+
+
+class TestInputValidation:
+    """Regression: invalid periods/budgets/traces must raise, not silently
+    produce wrong energy totals (ISSUE 3 satellite bugfix)."""
+
+
+    @pytest.mark.parametrize("t_req", [0.0, -40.0, float("nan"), float("inf")])
+    def test_simulate_rejects_bad_period(self, item, t_req):
+        spec = ExperimentSpec(
+            workload=WorkloadSpec(4147.0, t_req), item=item,
+            strategy_kind="idle_waiting",
+        )
+        with pytest.raises(ValueError, match="request_period_ms"):
+            simulate(spec)
+
+    @pytest.mark.parametrize("budget_j", [-1.0, float("nan")])
+    def test_simulate_rejects_bad_budget(self, item, budget_j):
+        spec = ExperimentSpec(
+            workload=WorkloadSpec(budget_j, 40.0), item=item,
+            strategy_kind="on_off",
+        )
+        with pytest.raises(ValueError, match="energy_budget_mj"):
+            simulate(spec)
+
+    def test_trace_rejects_negative_timestamp(self, item):
+        from repro.core.adaptive import StaticPolicy
+
+        with pytest.raises(ValueError, match="non-negative"):
+            simulate_trace(item, [-1.0, 10.0], StaticPolicy("idle_waiting", item))
+
+    def test_trace_rejects_non_monotonic_timestamps(self, item):
+        from repro.core.adaptive import StaticPolicy
+
+        with pytest.raises(ValueError, match="non-decreasing"):
+            simulate_trace(item, [0.0, 100.0, 50.0], StaticPolicy("idle_waiting", item))
+
+    @pytest.mark.parametrize("bad", [float("nan"), float("inf"), "80"])
+    def test_trace_rejects_non_finite_timestamps(self, item, bad):
+        from repro.core.adaptive import StaticPolicy
+
+        with pytest.raises((ValueError, TypeError)):
+            simulate_trace(item, [0.0, bad], StaticPolicy("idle_waiting", item))
+
+    def test_equal_timestamps_still_allowed(self, item):
+        # simultaneous arrivals queue — they are valid, not "decreasing"
+        from repro.core.adaptive import StaticPolicy
+
+        res = simulate_trace(
+            item, [0.0, 0.0, 40.0], StaticPolicy("idle_waiting", item), 1e6
+        )
+        assert res.n_items == 3
+
+    def test_numpy_timestamps_accepted(self, item):
+        # regression: np.float64/np.int64 sequences are valid traces
+        from repro.core.adaptive import StaticPolicy
+
+        for arr in (np.arange(0, 200, 40, dtype=np.int64),
+                    np.arange(0.0, 200.0, 40.0),
+                    np.arange(0, 200, 40, dtype=np.float32)):
+            res = simulate_trace(item, arr, StaticPolicy("idle_waiting", item), 1e6)
+            assert res.n_items == 5
+
+    def test_jax_array_timestamps_accepted(self, item):
+        # regression: jnp-array traces (e.g. one sample_batch row) are valid
+        import jax.numpy as jnp
+
+        from repro.core.adaptive import StaticPolicy
+
+        arr = jnp.asarray([0.0, 40.0, 80.0, 120.0])
+        res = simulate_trace(item, arr, StaticPolicy("idle_waiting", item), 1e6)
+        assert res.n_items == 4
