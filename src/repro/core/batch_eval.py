@@ -47,6 +47,43 @@ multiplies, so jitted results can drift by one ulp (≲1e-15 relative) and
 boundary.  ``tests/test_batch_eval.py`` enforces the eager contract on
 randomized inputs and ``tests/test_paper_numbers.py`` pins every headline
 constant through both paths.
+
+Examples
+--------
+Experiment 1 in one call — the whole (device × buswidth × clock ×
+compression) grid, whose worst/best ratio is the paper's ≈**40.13×**
+configuration-energy reduction (calibrated model: 40.12×, within 0.5%)
+down to the 11.85 mJ optimum:
+
+>>> from repro.core.batch_eval import config_phase_grid
+>>> from repro.core.config_phase import SPARTAN7_XC7S15
+>>> g = config_phase_grid(SPARTAN7_XC7S15)
+>>> g["config_energy_mj"].shape          # (device, buswidth, clock, compression)
+(1, 3, 11, 2)
+>>> e = g["config_energy_mj"]
+>>> round(float(e.min()), 2)
+11.85
+>>> round(float(e.max() / e.min()), 2)
+40.12
+>>> abs(float(e.max() / e.min()) - 40.13) / 40.13 < 0.005
+True
+
+Strategy evaluation broadcasts over request periods / budgets / idle
+powers; ``n_max`` is integer-exact vs the scalar oracle:
+
+>>> import numpy as np
+>>> from repro.core import energy_model as em
+>>> from repro.core.batch_eval import evaluate_idlewait_batch
+>>> from repro.core.phases import paper_lstm_item
+>>> item = paper_lstm_item()
+>>> r = evaluate_idlewait_batch(item, np.array([40.0, 80.0]),
+...                             idle_powers_mw=24.0,
+...                             powerup_overhead_mj=em.CALIBRATED_POWERUP_OVERHEAD_MJ)
+>>> r.n_max
+array([4295042, 2153688])
+>>> int(r.n_max[0]) == em.idlewait_n_max(item, 40.0, idle_power_mw=24.0,
+...     powerup_overhead_mj=em.CALIBRATED_POWERUP_OVERHEAD_MJ)
+True
 """
 from __future__ import annotations
 
@@ -84,6 +121,12 @@ __all__ = [
     "evaluate_adaptive_batch",
     "crossover_batch",
     "sweep_batch",
+    # differentiable primitives (repro.optimize builds on these)
+    "config_phase_kernel",
+    "crossover_kernel",
+    "idle_energy_kernel",
+    "onoff_n_smooth",
+    "idlewait_n_smooth",
 ]
 
 _F64 = jnp.float64
@@ -242,6 +285,73 @@ def _config_grid_kernel(dev: Mapping[str, jnp.ndarray], w, f, c):
         "config_power_mw": config_power,
         "config_energy_mj": config_energy,
     }
+
+
+# ---------------------------------------------------------------------------
+# Differentiable primitives
+# ---------------------------------------------------------------------------
+# The closed forms above are pure jnp array programs, so they are also the
+# *differentiable* substrate :mod:`repro.optimize` runs gradient descent on.
+# The public aliases below are that contract: ``config_phase_kernel`` accepts
+# arbitrary continuous buswidth/clock values (the model is defined on the
+# continuum; Table 1 is just where the hardware was measured) and a *fractional*
+# compression in [0, 1] (interpolating the compressed-bits/extra-switching
+# terms linearly — exact at the {0, 1} endpoints); ``onoff_n_smooth`` /
+# ``idlewait_n_smooth`` are the pre-floor real-valued item counts (the floor
+# in Eq. 3 is the only non-differentiable op in the whole model, so the
+# relaxation simply omits it and re-validates through the exact kernels after
+# rounding).  All have well-defined ``jax.grad`` everywhere the paper's grid
+# lives.
+
+#: Configuration-phase stage models over broadcast arrays (see
+#: :func:`config_phase_grid` for the dict-of-arrays layout).  Differentiable
+#: in ``w`` (buswidth), ``f`` (clock MHz) and ``c`` (compression fraction —
+#: pass booleans for the exact Table-1 behaviour, floats in [0, 1] for the
+#: relaxed model).  Exactness note: the fractional form recovers the exact
+#: kernel's values at ``c ∈ {0, 1}`` bit-for-bit because ``1 + (r − 1) == r``
+#: exactly for ``compression_ratio ∈ [0.5, 2]`` (Sterbenz); real 7-series
+#: compression ratios live in (0.5, 1), but a hypothetical device outside
+#: that range would drift by one ulp at the compressed corner.
+def config_phase_kernel(dev: Mapping[str, jnp.ndarray], w, f, c) -> dict[str, jnp.ndarray]:
+    lanes = jnp.multiply(w, f)   # jnp.ndarray even for Python-scalar w/f
+    c = jnp.asarray(c)
+    cf = c.astype(lanes.dtype) if c.dtype == bool else c
+    load_bits = dev["bitstream_bits"] * (1.0 + cf * (dev["compression_ratio"] - 1.0))
+    load_time = load_bits / lanes / 1000.0
+    k = dev["k_io_mw_per_lane_mhz"] + cf * dev["k_comp_mw_per_lane_mhz"]
+    load_power = dev["p_static_load_mw"] + k * lanes
+    load_energy = load_power * load_time / 1000.0
+    setup_energy = dev["setup_power_mw"] * dev["setup_time_ms"] / 1000.0
+    config_time = dev["setup_time_ms"] + load_time
+    config_energy = setup_energy + load_energy
+    config_power = 1000.0 * config_energy / config_time
+    return {
+        "load_time_ms": load_time,
+        "load_power_mw": load_power,
+        "load_energy_mj": load_energy,
+        "config_time_ms": config_time,
+        "config_power_mw": config_power,
+        "config_energy_mj": config_energy,
+    }
+
+
+def onoff_n_smooth(e_item, budget):
+    """Real-valued Eq.-3 count for On-Off: ``budget / e_item`` (no floor)."""
+    return budget / e_item
+
+
+def idlewait_n_smooth(e_init, e_exec, e_idle, budget):
+    """Real-valued Eq.-3 count for Idle-Waiting (no floor), clamped at 0."""
+    return jnp.maximum((budget - e_init + e_idle) / (e_exec + e_idle), 0.0)
+
+
+#: :func:`repro.core.energy_model.idle_energy_mj` as an array program:
+#: ``p_idle · (t_req − t_exec) / 1000``.
+idle_energy_kernel = _idle_energy
+
+#: :func:`repro.core.energy_model.crossover_period_ms` as an array program
+#: (∞ where ``p_idle ≤ 0``); differentiable in every argument elsewhere.
+crossover_kernel = _crossover
 
 
 # ---------------------------------------------------------------------------

@@ -33,6 +33,8 @@ from repro.core.phases import WorkloadItem
 
 __all__ = [
     "pareto_mask",
+    "pareto_mask_jnp",
+    "soft_pareto_weight",
     "pareto_points",
     "config_pareto",
     "strategy_pareto",
@@ -42,12 +44,30 @@ __all__ = [
 _CHUNK = 2048
 
 
+def pareto_mask_jnp(costs: jnp.ndarray) -> jnp.ndarray:
+    """Non-dominated mask over a ``(N, K)`` jnp cost array, minimizing every
+    column — the jit/vmap-composable core of :func:`pareto_mask`, usable
+    inside transformed code (e.g. :mod:`repro.optimize` filtering candidate
+    configurations on device, without a host round trip).
+
+    Point *i* is dominated iff some *j* is ≤ in every objective and < in at
+    least one.  O(N²) pairwise dominance as one vmap; for very large N
+    prefer :func:`pareto_mask`, which chunks the candidate axis.
+    """
+
+    def dominated(x):
+        le = jnp.all(costs <= x, axis=1)
+        lt = jnp.any(costs < x, axis=1)
+        return jnp.any(le & lt)
+
+    return ~jax.vmap(dominated)(costs)
+
+
 def pareto_mask(costs, chunk: int = _CHUNK) -> np.ndarray:
     """Non-dominated mask over ``costs`` of shape (N, K), minimizing every
-    column.  Point *i* is dominated iff some *j* is ≤ in every objective and
-    < in at least one.  O(N²) pairwise dominance, evaluated as a vmap over
-    candidate points in chunks of ``chunk`` to bound the (chunk × N)
-    intermediate.
+    column (see :func:`pareto_mask_jnp` for the dominance rule).  Evaluated
+    as a vmap over candidate points in chunks of ``chunk`` to bound the
+    (chunk × N) intermediate.
     """
     c = np.asarray(costs, dtype=np.float64)
     if c.ndim != 2:
@@ -70,6 +90,33 @@ def pareto_mask(costs, chunk: int = _CHUNK) -> np.ndarray:
             for i in range(0, n, chunk)
         ]
     return ~np.concatenate(out)
+
+
+def soft_pareto_weight(costs: jnp.ndarray, temperature: float = 1.0) -> jnp.ndarray:
+    """Differentiable relaxation of Pareto-frontier membership, shape (N,).
+
+    For each ordered pair (i, j), ``m_ij = max_k (c_jk − c_ik)`` is the
+    margin by which *j* fails to dominate *i* (j dominates i iff it is no
+    worse in every objective, i.e. ``m_ij ≤ 0`` with some strict
+    improvement).  The weight
+
+        w_i = Π_{j≠i} σ(m_ij / τ)
+
+    is 1 when no point comes close to dominating *i* and → 0 as some *j*
+    dominates it; as ``τ → 0`` it approaches the hard
+    :func:`pareto_mask_jnp` (up to ties).  ``jax.grad`` flows through the
+    costs, so an optimizer can *pull a design toward the frontier* by
+    maximizing its weight — the frontier as a loss term rather than a
+    post-hoc filter.
+    """
+    c = jnp.asarray(costs)
+    if c.ndim != 2:
+        raise ValueError(f"costs must be (N, K), got shape {c.shape}")
+    margins = jnp.max(c[None, :, :] - c[:, None, :], axis=-1)   # (N, N): m_ij
+    s = jax.nn.sigmoid(margins / temperature)
+    # a point never dominates itself: force the diagonal factor to 1
+    s = jnp.where(jnp.eye(c.shape[0], dtype=bool), 1.0, s)
+    return jnp.prod(s, axis=1)
 
 
 def pareto_points(

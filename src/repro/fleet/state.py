@@ -103,6 +103,14 @@ class DeviceSpec:
             powerup_overhead_mj=spec.powerup_overhead_mj,
         )
 
+    def with_budget(self, e_budget_mj: float) -> "DeviceSpec":
+        """This spec under a different energy budget — convenience for
+        materializing a planner allocation (:mod:`repro.optimize.planner`)
+        back into individual specs; the vectorized hand-off is
+        :meth:`FleetParams.with_budgets`, which replaces only the budget
+        column of an already-stacked fleet."""
+        return dataclasses.replace(self, e_budget_mj=float(e_budget_mj))
+
     # ---- scalar-path resolution (the oracle's own code) ---------------------
     def idle_power_mw(self) -> float:
         return IdleWaitingStrategy(self.item, self.powerup_overhead_mj, method=self.method).idle_power_mw
@@ -261,6 +269,20 @@ class FleetParams:
             return jax.tree_util.tree_map(
                 lambda a: jnp.tile(a, reps)[:n], self
             )
+
+    def with_budgets(self, e_budgets_mj) -> "FleetParams":
+        """Replace only the per-device budget column, shape ``(N,)`` — the
+        planner's hand-off: every other constant (and hence the admission
+        closed forms) stays bit-identical, so replaying a planned allocation
+        through :func:`repro.fleet.step.run_periodic` reproduces the
+        planner's predicted item counts and lifetimes exactly."""
+        with enable_x64():
+            budgets = jnp.asarray(e_budgets_mj, dtype=jnp.float64)
+        if budgets.shape != self.e_budget_mj.shape:
+            raise ValueError(
+                f"budgets shape {budgets.shape} != fleet shape {self.e_budget_mj.shape}"
+            )
+        return dataclasses.replace(self, e_budget_mj=budgets)
 
 
 def uniform_fleet(

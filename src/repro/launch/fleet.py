@@ -21,14 +21,14 @@ finishes in seconds (the CI benchmarks job runs exactly that).
 from __future__ import annotations
 
 import argparse
-import json
 import math
 import sys
 import time
 
+from repro.launch._cli import emit, make_parser, powerup_overhead_mj
+
 
 def _build_params(args):
-    from repro.core import energy_model as em
     from repro.core.phases import paper_lstm_item
     from repro.core.strategies import IdlePowerMethod
     from repro.fleet import uniform_fleet
@@ -45,7 +45,7 @@ def _build_params(args):
         method=IdlePowerMethod(args.method),
         request_period_ms=args.period_ms,
         e_budget_mj=args.budget_j * 1000.0,
-        powerup_overhead_mj=em.CALIBRATED_POWERUP_OVERHEAD_MJ if args.calibrated else 0.0,
+        powerup_overhead_mj=powerup_overhead_mj(args),
     )
 
 
@@ -74,14 +74,13 @@ def _baseline_loop(args, counts, n_baseline: int) -> tuple[float, int]:
     routed streams.  Returns (elapsed_s, requests_served)."""
     import numpy as np
 
-    from repro.core import energy_model as em
     from repro.core.adaptive import StaticPolicy
     from repro.core.phases import paper_lstm_item
     from repro.core.simulator import simulate_trace
     from repro.core.strategies import IdlePowerMethod
 
     item = paper_lstm_item()
-    powerup = em.CALIBRATED_POWERUP_OVERHEAD_MJ if args.calibrated else 0.0
+    powerup = powerup_overhead_mj(args)
     strategies = (
         ("on_off", "idle_waiting", "adaptive")
         if args.strategy == "mix"
@@ -126,7 +125,6 @@ def _baseline_loop(args, counts, n_baseline: int) -> tuple[float, int]:
 def _oracle_self_check(args, max_steps: int) -> dict:
     """N=1 periodic fleet vs the scalar ``simulate()`` oracle (artifact
     self-verification; cheap)."""
-    from repro.core import energy_model as em
     from repro.core.simulator import simulate
     from repro.core.strategies import IdlePowerMethod
     from repro.core.workload import ExperimentSpec, WorkloadSpec
@@ -134,7 +132,7 @@ def _oracle_self_check(args, max_steps: int) -> dict:
     from repro.core.phases import paper_lstm_item
 
     item = paper_lstm_item()
-    powerup = em.CALIBRATED_POWERUP_OVERHEAD_MJ if args.calibrated else 0.0
+    powerup = powerup_overhead_mj(args)
     out = {}
     for strat in ("on_off", "idle_waiting"):
         spec = ExperimentSpec(
@@ -167,9 +165,12 @@ def _oracle_self_check(args, max_steps: int) -> dict:
 
 
 def main(argv=None) -> int:
-    ap = argparse.ArgumentParser(
+    ap = make_parser(
         prog="python -m repro.launch.fleet",
         description="Fleet-scale vectorized duty-cycle simulation (one lax.scan).",
+        jit_flag=False,
+        calibrated_default=True,
+        out_default="BENCH_fleet.json",
     )
     ap.add_argument("--devices", type=int, default=4096)
     ap.add_argument("--horizon", type=float, default=10.0, help="simulated seconds")
@@ -197,13 +198,10 @@ def main(argv=None) -> int:
                     help="skip per-tick latency trajectories (saves K x N "
                          "memory on very long routed horizons)")
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--calibrated", action="store_true", default=True)
-    ap.add_argument("--no-calibrated", dest="calibrated", action="store_false")
     ap.add_argument("--baseline-devices", type=int, default=None,
                     help="devices in the looped baseline (default min(N, 64))")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run: tiny baseline + self-check caps")
-    ap.add_argument("--out", default="BENCH_fleet.json", metavar="PATH")
     args = ap.parse_args(argv)
 
     if args.devices <= 0:
@@ -317,9 +315,7 @@ def main(argv=None) -> int:
         args, max_steps=2_000 if args.smoke else 6_000_000
     )
 
-    text = json.dumps(payload, indent=2)
-    with open(args.out, "w") as f:
-        f.write(text)
+    emit(payload, args.out, label="fleet summary")
     tp = payload["throughput"]["periodic"]
     print(
         f"fleet[{args.mode}] {args.devices} devices x {n_steps} steps | "
@@ -334,7 +330,6 @@ def main(argv=None) -> int:
             f"vs looped {rt['looped_baseline']['devices_per_s']} devices/s -> "
             f"speedup {rt['speedup_devices_per_s']}x"
         )
-    print(f"wrote {args.out}", file=sys.stderr)
     return 0
 
 

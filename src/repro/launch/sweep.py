@@ -29,47 +29,18 @@ ranges (``--periods 10:120:10``, stop inclusive).
 """
 from __future__ import annotations
 
-import argparse
-import json
 import sys
-import time
 
-
-def _parse_axis(spec: str) -> list[float]:
-    """'a:b:step' (inclusive) or 'x,y,z' → list of floats."""
-    if ":" in spec:
-        parts = [float(x) for x in spec.split(":")]
-        if len(parts) != 3:
-            raise argparse.ArgumentTypeError(f"range must be start:stop:step, got {spec!r}")
-        start, stop, step = parts
-        if step <= 0:
-            raise argparse.ArgumentTypeError(f"step must be positive in {spec!r}")
-        out = []
-        x = start
-        while x <= stop + 1e-9:
-            out.append(round(x, 10))
-            x += step
-        return out
-    return [float(x) for x in spec.split(",") if x]
-
-
-def _resolve_devices(spec: str):
-    from repro.core.config_phase import DEVICES
-
-    if spec == "both":
-        return tuple(DEVICES.values())
-    out = []
-    for name in spec.split(","):
-        if name not in DEVICES:
-            raise SystemExit(f"unknown device {name!r}; known: {', '.join(DEVICES)} or 'both'")
-        out.append(DEVICES[name])
-    return tuple(out)
-
-
-def _resolve_methods(spec: str):
-    from repro.core.strategies import IdlePowerMethod
-
-    return tuple(IdlePowerMethod(m) for m in spec.split(","))
+from repro.launch._cli import (
+    Timer,
+    emit,
+    finish_payload,
+    make_parser,
+    parse_axis as _parse_axis,
+    powerup_overhead_mj,
+    resolve_devices as _resolve_devices,
+    resolve_methods as _resolve_methods,
+)
 
 
 def _config_axes(args) -> tuple[tuple, tuple, tuple]:
@@ -89,7 +60,6 @@ def _config_axes(args) -> tuple[tuple, tuple, tuple]:
 
 
 def build_grid(args) -> "SweepGrid":  # noqa: F821 (forward ref for --help speed)
-    from repro.core import energy_model as em
     from repro.core.batch_eval import SweepGrid
 
     buswidths, clocks, compression = _config_axes(args)
@@ -101,12 +71,12 @@ def build_grid(args) -> "SweepGrid":  # noqa: F821 (forward ref for --help speed
         request_periods_ms=tuple(_parse_axis(args.periods)),
         idle_methods=_resolve_methods(args.methods),
         e_budgets_mj=tuple(b * 1000.0 for b in _parse_axis(args.budgets_j)),
-        powerup_overhead_mj=em.CALIBRATED_POWERUP_OVERHEAD_MJ if args.calibrated else 0.0,
+        powerup_overhead_mj=powerup_overhead_mj(args),
     )
 
 
 def main(argv=None) -> int:
-    ap = argparse.ArgumentParser(
+    ap = make_parser(
         prog="python -m repro.launch.sweep",
         description="Vectorized design-space sweeps (JSON grids).",
     )
@@ -122,20 +92,14 @@ def main(argv=None) -> int:
     ap.add_argument("--budgets-j", default="4147", help="energy budgets, J")
     ap.add_argument("--idle-powers", default="134.3,34.2,24.0",
                     help="idle powers (mW) for --kind crossover")
-    ap.add_argument("--calibrated", action="store_true",
-                    help="include the calibrated power-up overhead (DESIGN.md §2)")
-    ap.add_argument("--jit", action="store_true",
-                    help="XLA-fused kernels (faster, last-ulp drift vs the scalar oracle)")
     ap.add_argument("--limit", type=int, default=None, help="cap emitted records")
-    ap.add_argument("--out", default=None, metavar="PATH", help="write JSON here (default stdout)")
     args = ap.parse_args(argv)
 
-    from repro.core import energy_model as em
     from repro.core.batch_eval import config_phase_grid, sweep_batch
     from repro.core.phases import paper_lstm_item
 
     payload: dict = {"kind": args.kind}
-    t0 = time.perf_counter()
+    timer = Timer().__enter__()
 
     if args.kind == "config":
         devices = _resolve_devices(args.devices)
@@ -189,31 +153,17 @@ def main(argv=None) -> int:
             paper_lstm_item(),
             devices,
             _parse_axis(args.idle_powers),
-            powerup_overhead_mj=em.CALIBRATED_POWERUP_OVERHEAD_MJ if args.calibrated else 0.0,
+            powerup_overhead_mj=powerup_overhead_mj(args),
         )
         payload.update(
             {"axes": surf["axes"], "crossover_ms": surf["crossover_ms"].tolist()}
         )
 
-    elapsed = time.perf_counter() - t0
-    size = payload.get("size") or len(payload.get("records", [])) or None
-    payload["meta"] = {
-        "elapsed_s": round(elapsed, 6),
-        "points_per_s": round(size / elapsed, 1) if size else None,
-        "jit": bool(args.jit),
-        "calibrated": bool(args.calibrated),
-    }
-
-    text = json.dumps(payload, indent=2)
-    if args.out:
-        with open(args.out, "w") as f:
-            f.write(text)
-        print(
-            f"wrote {args.kind} grid ({size or '?'} points, {elapsed*1e3:.1f} ms) to {args.out}",
-            file=sys.stderr,
-        )
-    else:
-        print(text)
+    timer.__exit__()
+    finish_payload(
+        payload, timer.elapsed_s, jit=bool(args.jit), calibrated=bool(args.calibrated)
+    )
+    emit(payload, args.out, label=f"{args.kind} grid")
     return 0
 
 

@@ -1,0 +1,62 @@
+"""Configuration-and-policy optimization: choose strategies, don't just
+evaluate them.
+
+The rest of the repo answers "what does configuration X cost?"
+(:mod:`repro.core`), "what does a whole grid of X cost?"
+(:mod:`repro.core.batch_eval`) and "what does a fleet of X do?"
+(:mod:`repro.fleet`).  This package closes the loop (see
+``docs/optimizer.md``):
+
+* :mod:`repro.optimize.relax`   — smooth, differentiable relaxation of the
+  energy/lifetime closed forms (continuous clock, softmax over discrete
+  bus-width/compression, sigmoid feasibility/crossover gates);
+* :mod:`repro.optimize.descent` — vmapped multi-start Adam over the
+  relaxation, rounded back to the legal grid and always re-validated
+  against the exact :mod:`repro.core.batch_eval` oracle;
+* :mod:`repro.optimize.planner` — fleet-wide budget allocation over the
+  affine Eq. 1–2 closed forms, replayable bit-for-bit through
+  :func:`repro.fleet.step.run_periodic`.
+"""
+from repro.optimize.descent import (
+    DescentSettings,
+    OptimizeResult,
+    descend,
+    optimize_config,
+    optimize_lifetime,
+    trace_config_frontier,
+)
+from repro.optimize.planner import (
+    BudgetAllocation,
+    plan_budgets,
+    replay_allocation,
+)
+from repro.optimize.relax import (
+    RelaxedProblem,
+    config_energy_loss,
+    lifetime_loss,
+    relaxed_config,
+    relaxed_counts,
+    snap,
+    straight_through_onehot,
+    straight_through_round,
+)
+
+__all__ = [
+    "BudgetAllocation",
+    "DescentSettings",
+    "OptimizeResult",
+    "RelaxedProblem",
+    "config_energy_loss",
+    "descend",
+    "lifetime_loss",
+    "optimize_config",
+    "optimize_lifetime",
+    "plan_budgets",
+    "relaxed_config",
+    "relaxed_counts",
+    "replay_allocation",
+    "snap",
+    "straight_through_onehot",
+    "straight_through_round",
+    "trace_config_frontier",
+]

@@ -103,6 +103,54 @@ class FleetBackend:
         self.n_devices = off
         self.params = FleetParams.from_specs(specs)
 
+    # ---- planner-driven placement -------------------------------------------
+    def plan_budgets(
+        self,
+        fleet_budget_mj: float,
+        horizon_ms: float,
+        objective: str = "min_lifetime",
+    ):
+        """Split one *shared* energy budget across every replica of every
+        tenant (:func:`repro.optimize.planner.plan_budgets`), instead of the
+        per-tenant batteries the specs declare.
+
+        The plan is computed on the periodic proxy — each replica serving
+        its thinned mean period, capped at the requests ``horizon_ms``
+        delivers — which is exactly the model the planner can replay
+        bit-for-bit through ``run_periodic``; :meth:`run` on the planned
+        backend then exercises the allocation under the real (Poisson,
+        routed) traffic.
+
+        Returns ``(allocation, per_tenant)`` where ``per_tenant`` maps
+        tenant name → planned budget / requests / lifetime summary.
+        """
+        import math
+
+        from repro.optimize.planner import plan_budgets as _plan
+
+        caps = np.maximum(
+            np.floor(horizon_ms / np.asarray(self.params.period_ms)), 0.0
+        ).astype(np.int64)
+        alloc = _plan(self.params, fleet_budget_mj, caps, objective=objective)
+        per_tenant = {}
+        for t, (a, b) in zip(self.tenants, self.blocks):
+            per_tenant[t.name] = {
+                "replicas": t.replicas,
+                "budget_mj": float(alloc.budgets_mj[a:b].sum()),
+                "planned_requests": int(alloc.n_items[a:b].sum()),
+                "min_lifetime_ms": float(alloc.predicted_lifetime_ms[a:b].min()),
+                "max_lifetime_ms": float(alloc.predicted_lifetime_ms[a:b].max()),
+            }
+        assert math.isfinite(alloc.leftover_mj)
+        return alloc, per_tenant
+
+    def with_allocation(self, allocation) -> "FleetBackend":
+        """A new backend whose replicas carry the planner's per-device
+        budgets (every other parameter bit-identical)."""
+        clone = FleetBackend(self.tenants)
+        clone.params = self.params.with_budgets(allocation.budgets_mj)
+        return clone
+
     def run(
         self,
         horizon_ms: float,

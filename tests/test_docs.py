@@ -1,0 +1,40 @@
+"""Documentation integrity: links resolve, every docs page is reachable
+from the hub, and the README routes through it.
+
+The same checks run in CI's docs job via ``tools/linkcheck.py``; keeping
+them in tier-1 means a broken doc link fails locally before it fails
+there.
+"""
+import pathlib
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "tools"))
+
+import linkcheck  # noqa: E402
+
+
+def _md_files():
+    return [REPO / "README.md"] + sorted((REPO / "docs").glob("*.md"))
+
+
+@pytest.mark.parametrize("path", _md_files(), ids=lambda p: p.name)
+def test_relative_links_resolve(path):
+    assert linkcheck.check_file(path) == []
+
+
+def test_every_docs_page_reachable_from_index():
+    assert linkcheck.check_hub(REPO / "docs" / "index.md") == []
+
+
+def test_readme_routes_through_docs_hub():
+    """The README links into the docs tree via the hub page."""
+    links = linkcheck.links_of(REPO / "README.md")
+    assert any(link.split("#")[0] == "docs/index.md" for link in links)
+
+
+def test_hub_links_the_optimizer_page():
+    links = linkcheck.links_of(REPO / "docs" / "index.md")
+    assert any(link.split("#")[0] == "optimizer.md" for link in links)

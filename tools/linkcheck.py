@@ -1,0 +1,109 @@
+#!/usr/bin/env python3
+"""Markdown link checker (stdlib only — runs in CI without extra deps).
+
+Checks every ``[text](target)`` in the given markdown files:
+
+* relative targets (files/dirs) must exist on disk, anchors stripped;
+* absolute URLs are syntax-checked only (CI must not depend on network);
+* with ``--require-hub PAGE``, every markdown file in PAGE's directory
+  must be reachable from PAGE by following relative markdown links (the
+  "every docs page is reachable from the hub" contract).
+
+Usage::
+
+    python tools/linkcheck.py README.md docs/*.md --require-hub docs/index.md
+
+Exits non-zero listing every broken link / unreachable page.
+"""
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+from pathlib import Path
+
+# [text](target) — excluding images' leading "!" is unnecessary: image
+# targets must exist too.  Inline code spans are stripped first.
+_LINK = re.compile(r"\[[^\]^\[]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_CODE_SPAN = re.compile(r"`[^`]*`")
+_CODE_BLOCK = re.compile(r"```.*?```", re.DOTALL)
+
+
+def links_of(path: Path) -> list[str]:
+    text = path.read_text(encoding="utf-8")
+    text = _CODE_BLOCK.sub("", text)
+    text = _CODE_SPAN.sub("", text)
+    return _LINK.findall(text)
+
+
+def check_file(path: Path) -> list[str]:
+    """Broken-link messages for one markdown file."""
+    problems = []
+    for target in links_of(path):
+        if target.startswith(("http://", "https://")):
+            if " " in target:
+                problems.append(f"{path}: malformed URL {target!r}")
+            continue
+        if target.startswith(("mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        if not (path.parent / rel).exists():
+            problems.append(f"{path}: broken relative link -> {target}")
+    return problems
+
+
+def check_hub(hub: Path) -> list[str]:
+    """Every .md sibling of ``hub`` must be reachable from it via relative
+    markdown links (transitively)."""
+    root = hub.parent
+    reachable = set()
+    frontier = [hub.resolve()]
+    while frontier:
+        page = frontier.pop()
+        if page in reachable or not page.exists():
+            continue
+        reachable.add(page)
+        for target in links_of(page):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            rel = target.split("#", 1)[0]
+            if rel.endswith(".md"):
+                frontier.append((page.parent / rel).resolve())
+    missing = [
+        str(p)
+        for p in sorted(root.glob("*.md"))
+        if p.resolve() not in reachable
+    ]
+    return [f"{hub}: page not reachable from hub -> {m}" for m in missing]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("files", nargs="+", help="markdown files to check")
+    ap.add_argument("--require-hub", metavar="PAGE", default=None,
+                    help="also require every .md in PAGE's directory to be "
+                         "reachable from PAGE")
+    args = ap.parse_args(argv)
+
+    problems: list[str] = []
+    for name in args.files:
+        p = Path(name)
+        if not p.exists():
+            problems.append(f"{name}: file not found")
+            continue
+        problems.extend(check_file(p))
+    if args.require_hub:
+        problems.extend(check_hub(Path(args.require_hub)))
+
+    for msg in problems:
+        print(msg, file=sys.stderr)
+    n = len(args.files)
+    if not problems:
+        print(f"linkcheck: {n} files OK")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
