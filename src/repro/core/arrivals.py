@@ -6,6 +6,9 @@ both the discrete-event simulator (:func:`repro.core.simulator.simulate_trace`)
 and the live serving layer (:mod:`repro.serving.scheduler`) consume:
 
 * :class:`DeterministicArrivals` — the paper's duty-cycle mode (period T);
+* :class:`JitteredArrivals`      — the duty-cycle mode with relative Gaussian
+  timing noise (the Monte Carlo engine's uncertainty knob; jitter 0 is the
+  deterministic mode exactly);
 * :class:`PoissonArrivals`       — memoryless traffic at a mean period;
 * :class:`MMPPArrivals`          — 2-state Markov-modulated Poisson process:
   bursts of fast requests separated by long quiet stretches (event-triggered
@@ -37,6 +40,20 @@ import jax.numpy as jnp
 from jax.experimental import enable_x64
 
 
+def _require_positive_rate(name: str, value: float, what: str = "rate") -> None:
+    """Reject non-finite (NaN/inf) and non-positive timing constants.
+
+    A NaN mean period passes a naive ``<= 0`` test (every comparison with
+    NaN is False) and then propagates silently through ``sample_batch`` into
+    the fleet scan, poisoning whole trajectories; this helper turns that
+    into an immediate, attributable ``ValueError``.
+    """
+    if not (math.isfinite(value) and value > 0):
+        raise ValueError(
+            f"{name}: {what} must be a finite, positive number of ms, got {value!r}"
+        )
+
+
 class ArrivalProcess:
     """Base interface: a generator of inter-arrival gaps (ms)."""
 
@@ -66,6 +83,23 @@ class ArrivalProcess:
         raise NotImplementedError(
             f"{type(self).__name__} has no vectorized batch sampler"
         )
+
+    def sample_gaps(self, key, n_streams: int, n_gaps: int) -> jnp.ndarray:
+        """``(n_streams, n_gaps)`` float64 inter-arrival gaps (ms), one
+        independent stream per row, in a single ``jax.random`` call chain.
+
+        The raw-gap companion of :meth:`sample_batch` (which returns padded
+        absolute arrival times): the Monte Carlo engine
+        (:mod:`repro.mc.ensemble`) feeds these straight into its
+        seed-vmapped scan, where every gap is one scan step and no horizon
+        padding is wanted.
+        """
+        if n_streams <= 0:
+            raise ValueError(f"n_streams must be positive, got {n_streams}")
+        if n_gaps < 0:
+            raise ValueError(f"n_gaps must be non-negative, got {n_gaps}")
+        with enable_x64():
+            return self._batch_gaps(key, n_streams, n_gaps)
 
     def sample_batch(
         self,
@@ -125,8 +159,7 @@ class DeterministicArrivals(ArrivalProcess):
     name: str = "deterministic"
 
     def __post_init__(self):
-        if self.period_ms <= 0:
-            raise ValueError(f"period must be positive, got {self.period_ms}")
+        _require_positive_rate("DeterministicArrivals", self.period_ms, "period")
 
     def inter_arrival_times(self, n: int, seed: int = 0) -> np.ndarray:
         return np.full((n,), self.period_ms, dtype=np.float64)
@@ -139,6 +172,46 @@ class DeterministicArrivals(ArrivalProcess):
 
 
 @dataclasses.dataclass(frozen=True)
+class JitteredArrivals(ArrivalProcess):
+    """Periodic requests with relative Gaussian timing jitter.
+
+    Gap ~ ``period_ms · max(1 + jitter · ε, 0)`` with ε standard normal —
+    the duty-cycle mode as a real deployment sees it (sensor clock drift,
+    network scheduling noise).  This is the Monte Carlo engine's knob
+    between the paper's perfectly periodic world and fully stochastic
+    traffic: ``jitter=0`` reproduces :class:`DeterministicArrivals`
+    *exactly* (every gap equals ``period_ms`` bit-for-bit), so ensemble
+    results collapse onto the deterministic closed forms in that limit.
+
+    The clip at 0 keeps gaps physical; for ``jitter ≲ 0.3`` the clipping
+    probability is < 0.05% and the mean-period bias is negligible.
+    """
+
+    period_ms: float
+    jitter: float = 0.1
+    name: str = "jittered"
+
+    def __post_init__(self):
+        _require_positive_rate("JitteredArrivals", self.period_ms, "period")
+        if not (math.isfinite(self.jitter) and self.jitter >= 0):
+            raise ValueError(
+                f"jitter must be a finite, non-negative fraction, got {self.jitter!r}"
+            )
+
+    def inter_arrival_times(self, n: int, seed: int = 0) -> np.ndarray:
+        rng = np.random.default_rng(seed)
+        eps = rng.standard_normal(n)
+        return self.period_ms * np.maximum(1.0 + self.jitter * eps, 0.0)
+
+    def mean_period_ms(self) -> float:
+        return self.period_ms
+
+    def _batch_gaps(self, key, n_devices: int, n_gaps: int) -> jnp.ndarray:
+        eps = jax.random.normal(key, (n_devices, n_gaps), dtype=jnp.float64)
+        return self.period_ms * jnp.maximum(1.0 + self.jitter * eps, 0.0)
+
+
+@dataclasses.dataclass(frozen=True)
 class PoissonArrivals(ArrivalProcess):
     """Memoryless arrivals: exponential gaps with the given mean."""
 
@@ -146,8 +219,7 @@ class PoissonArrivals(ArrivalProcess):
     name: str = "poisson"
 
     def __post_init__(self):
-        if self.mean_ms <= 0:
-            raise ValueError(f"mean period must be positive, got {self.mean_ms}")
+        _require_positive_rate("PoissonArrivals", self.mean_ms, "mean period")
 
     def inter_arrival_times(self, n: int, seed: int = 0) -> np.ndarray:
         rng = np.random.default_rng(seed)
@@ -181,10 +253,18 @@ class MMPPArrivals(ArrivalProcess):
     name: str = "mmpp"
 
     def __post_init__(self):
-        if self.burst_ms <= 0 or self.quiet_ms <= 0:
-            raise ValueError("state mean periods must be positive")
-        if self.mean_burst_len < 1 or self.mean_quiet_len < 1:
-            raise ValueError("mean dwell lengths must be ≥ 1 arrival")
+        _require_positive_rate("MMPPArrivals", self.burst_ms, "burst mean period")
+        _require_positive_rate("MMPPArrivals", self.quiet_ms, "quiet mean period")
+        # NaN dwell lengths pass a plain `< 1` test and turn the flip
+        # probabilities into NaN, which the lax.scan chain then propagates
+        # into every gap — reject them here alongside zero-length bursts.
+        for name, dwell in (("mean_burst_len", self.mean_burst_len),
+                            ("mean_quiet_len", self.mean_quiet_len)):
+            if not (math.isfinite(dwell) and dwell >= 1):
+                raise ValueError(
+                    f"MMPPArrivals: {name} must be a finite dwell of ≥ 1 "
+                    f"arrival (zero-length bursts are degenerate), got {dwell!r}"
+                )
 
     def inter_arrival_times(self, n: int, seed: int = 0) -> np.ndarray:
         rng = np.random.default_rng(seed)
@@ -235,8 +315,18 @@ class TraceArrivals(ArrivalProcess):
     def __post_init__(self):
         if not self.gaps_ms:
             raise ValueError("trace must contain at least one gap")
-        if any(g < 0 for g in self.gaps_ms):
-            raise ValueError("trace gaps must be non-negative")
+        for i, g in enumerate(self.gaps_ms):
+            # `g < 0` alone lets NaN through (NaN compares False), and a NaN
+            # gap then corrupts every cumulative arrival time downstream
+            if not (math.isfinite(g) and g >= 0):
+                raise ValueError(
+                    f"trace gap [{i}] = {g!r}: gaps must be finite and non-negative"
+                )
+        if not any(g > 0 for g in self.gaps_ms):
+            raise ValueError(
+                "trace gaps are all zero (zero-length bursts only): the mean "
+                "request period would be 0 ms, an infinite arrival rate"
+            )
 
     def inter_arrival_times(self, n: int, seed: int = 0) -> np.ndarray:
         reps = math.ceil(n / len(self.gaps_ms)) if n else 0
@@ -321,6 +411,7 @@ def make_process(kind: str, **kwargs) -> ArrivalProcess:
     """Factory for YAML/CLI-driven experiments."""
     kinds = {
         "deterministic": DeterministicArrivals,
+        "jittered": JitteredArrivals,
         "poisson": PoissonArrivals,
         "mmpp": MMPPArrivals,
         "bursty": MMPPArrivals,

@@ -122,6 +122,45 @@ def _baseline_loop(args, counts, n_baseline: int) -> tuple[float, int]:
     return time.perf_counter() - t0, served
 
 
+def _uncertainty_section(args, params, n_steps: int) -> dict:
+    """CI-banded fleet metrics: ``--n-seeds`` periodic-mode replications
+    through the Monte Carlo engine (:mod:`repro.mc`), with the request
+    stream matching ``--process`` (plus ``--jitter`` timing noise in the
+    deterministic case — 0 keeps every band collapsed on the exact
+    duty-cycle numbers)."""
+    import numpy as np
+
+    from repro.core.arrivals import JitteredArrivals, MMPPArrivals, PoissonArrivals
+    from repro.mc import ci_dict, run_periodic_ensemble, welford_interval
+
+    t = args.period_ms
+    if args.process == "poisson":
+        process = PoissonArrivals(t)
+    elif args.process == "mmpp":
+        # stationary mean pinned at the device period: (8·t/2 + 5t)/9 = t
+        process = MMPPArrivals(burst_ms=t / 2.0, quiet_ms=5.0 * t)
+    else:
+        process = JitteredArrivals(t, args.jitter)
+    ens = run_periodic_ensemble(
+        params, process, n_steps, args.n_seeds, seed=args.seed
+    )
+
+    dev = welford_interval(ens.device_lifetime_ms)
+    return {
+        "process": process.name,
+        "jitter": args.jitter if process.name == "jittered" else None,
+        "n_seeds": ens.n_seeds,
+        "n_steps": ens.n_steps,
+        "lifetime_ms": ci_dict(ens.lifetime_ms),
+        "energy_per_request_mj": ci_dict(ens.energy_per_request_mj),
+        "total_items": ci_dict(ens.total_items),
+        "per_device_lifetime_ms": {
+            "mean_range": [float(np.min(dev["mean"])), float(np.max(dev["mean"]))],
+            "std_range": [float(np.min(dev["std"])), float(np.max(dev["std"]))],
+        },
+    }
+
+
 def _oracle_self_check(args, max_steps: int) -> dict:
     """N=1 periodic fleet vs the scalar ``simulate()`` oracle (artifact
     self-verification; cheap)."""
@@ -198,6 +237,13 @@ def main(argv=None) -> int:
                     help="skip per-tick latency trajectories (saves K x N "
                          "memory on very long routed horizons)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--n-seeds", type=int, default=None,
+                    help="Monte Carlo replications: add an 'uncertainty' "
+                         "section with CI-banded fleet metrics (repro.mc)")
+    ap.add_argument("--jitter", type=float, default=0.0,
+                    help="relative Gaussian request-timing jitter for the "
+                         "uncertainty section (deterministic process only; "
+                         "0 = exact duty-cycle limit)")
     ap.add_argument("--baseline-devices", type=int, default=None,
                     help="devices in the looped baseline (default min(N, 64))")
     ap.add_argument("--smoke", action="store_true",
@@ -221,8 +267,8 @@ def main(argv=None) -> int:
             k: getattr(args, k)
             for k in ("devices", "horizon", "mode", "router", "strategy", "method",
                       "process", "period_ms", "load", "dt_ms", "budget_j",
-                      "queue_capacity", "collect_latency", "seed", "calibrated",
-                      "smoke")
+                      "queue_capacity", "collect_latency", "seed", "n_seeds",
+                      "jitter", "calibrated", "smoke")
         },
     }
 
@@ -314,6 +360,9 @@ def main(argv=None) -> int:
     payload["oracle_self_check"] = _oracle_self_check(
         args, max_steps=2_000 if args.smoke else 6_000_000
     )
+
+    if args.n_seeds:
+        payload["uncertainty"] = _uncertainty_section(args, params, n_steps_p)
 
     emit(payload, args.out, label="fleet summary")
     tp = payload["throughput"]["periodic"]

@@ -20,6 +20,11 @@ Traffic: each tenant's request stream is Poisson at its mean period,
 thinned uniformly across its replicas (exact for Poisson: R independent
 streams at R× the period), sampled batch-wise by
 :meth:`repro.core.arrivals.ArrivalProcess.sample_batch`.
+
+Uncertainty: :meth:`FleetBackend.run_mc` replicates the whole backend run
+across seeds (optionally with per-seed traffic-rate jitter) through the
+Monte Carlo engine (:mod:`repro.mc`), turning every per-tenant number into
+a confidence band.
 """
 from __future__ import annotations
 
@@ -151,6 +156,60 @@ class FleetBackend:
         clone.params = self.params.with_budgets(allocation.budgets_mj)
         return clone
 
+    def _sample_counts(
+        self,
+        horizon_ms: float,
+        dt_ms: float,
+        seed: int,
+        n_seeds: int = 1,
+        jitter: float = 0.0,
+        max_arrivals: int | None = None,
+    ) -> np.ndarray:
+        """``(n_seeds, K, N)`` binned per-replica arrival counts.
+
+        ``jitter`` adds per-seed *global traffic-rate* noise: replication s
+        scales every tenant's timeline by ``1 + jitter · ε_s`` (ε standard
+        normal, clipped at 0.1) — day-to-day load variation, the knob the
+        Monte Carlo engine threads through the serving layer.  Streams are
+        sampled on an extended horizon so fast-clock seeds (factor < 1)
+        are not truncation-biased near the horizon edge.
+        """
+        if n_seeds < 1:
+            raise ValueError(f"n_seeds must be ≥ 1, got {n_seeds}")
+        if not (math.isfinite(jitter) and jitter >= 0):
+            raise ValueError(f"jitter must be a finite, non-negative fraction, got {jitter!r}")
+        n_steps = int(math.ceil(horizon_ms / dt_ms))
+        rng = np.random.default_rng(seed)
+        factors = np.maximum(1.0 + jitter * rng.standard_normal(n_seeds), 0.1)
+        horizon_ext = horizon_ms / float(np.min(factors))
+        keys = jax.random.split(jax.random.PRNGKey(seed), len(self.tenants))
+        per_tenant = []
+        for t, key in zip(self.tenants, keys):
+            # R independent Poisson streams at R× the tenant period ≡ the
+            # tenant's stream thinned uniformly across its replicas
+            proc = PoissonArrivals(t.mean_period_ms * t.replicas)
+            if max_arrivals is None:
+                est = horizon_ext / proc.mean_period_ms()
+                # wider headroom than sample_batch's default: hundreds of
+                # replica streams make 4-sigma tail truncation likely
+                cap = int(est + 8.0 * math.sqrt(est) + 16.0)
+            else:
+                cap = max_arrivals
+            times = proc.sample_batch(
+                key, n_seeds * t.replicas, horizon_ext,
+                max_arrivals=cap, include_origin=False,
+            )
+            times = np.asarray(times).reshape(n_seeds, t.replicas, -1)
+            times = times * factors[:, None, None]
+            counts = np.asarray(
+                bin_arrival_counts(times.reshape(n_seeds * t.replicas, -1),
+                                   horizon_ms, dt_ms)
+            )
+            per_tenant.append(
+                counts.reshape(n_steps, n_seeds, t.replicas).transpose(1, 0, 2)
+            )
+        return np.concatenate(per_tenant, axis=2)
+
     def run(
         self,
         horizon_ms: float,
@@ -166,24 +225,12 @@ class FleetBackend:
         horizons / heavy tails where tail truncation would bias the
         per-tenant counts low).
         """
-        keys = jax.random.split(jax.random.PRNGKey(seed), len(self.tenants))
-        per_device = []
-        for t, key in zip(self.tenants, keys):
-            # R independent Poisson streams at R× the tenant period ≡ the
-            # tenant's stream thinned uniformly across its replicas
-            proc = PoissonArrivals(t.mean_period_ms * t.replicas)
-            if max_arrivals is None:
-                est = horizon_ms / proc.mean_period_ms()
-                # wider headroom than sample_batch's default: hundreds of
-                # replica streams make 4-sigma tail truncation likely
-                cap = int(est + 8.0 * math.sqrt(est) + 16.0)
-            else:
-                cap = max_arrivals
-            times = proc.sample_batch(
-                key, t.replicas, horizon_ms, max_arrivals=cap, include_origin=False
-            )
-            per_device.append(bin_arrival_counts(times, horizon_ms, dt_ms))
-        counts = np.concatenate([np.asarray(c) for c in per_device], axis=1)
+        # the single-replication slice of the MC sampler (jitter 0 scales
+        # timelines by exactly 1.0, so this is the same stream bit-for-bit)
+        counts = self._sample_counts(
+            horizon_ms, dt_ms, seed, n_seeds=1, jitter=0.0,
+            max_arrivals=max_arrivals,
+        )[0]
         result = run_routed(
             self.params, counts, dt_ms, router=None,
             queue_capacity=queue_capacity,
@@ -208,5 +255,72 @@ class FleetBackend:
                 "energy_per_request_mj": (e / n) if n else None,
                 "configurations": int(configs[a:b].sum()),
                 "replicas_alive": int(alive[a:b].sum()),
+            }
+        return out
+
+    def run_mc(
+        self,
+        horizon_ms: float,
+        dt_ms: float = 100.0,
+        n_seeds: int = 32,
+        seed: int = 0,
+        jitter: float = 0.0,
+        queue_capacity: int = 16,
+        max_arrivals: int | None = None,
+        confidence: float = 0.95,
+    ) -> dict:
+        """Seed-replicated :meth:`run`: per-tenant **confidence bands**.
+
+        Every replication redraws each tenant's Poisson streams (and, with
+        ``jitter`` > 0, its global traffic rate — see
+        :meth:`_sample_counts`), then all ``n_seeds`` × N-replica fleets
+        advance through the Monte Carlo engine's one vmapped routed scan
+        (:func:`repro.mc.ensemble.routed_ensemble`, the same step body
+        :meth:`run` uses).  Point estimates become 95% intervals: fleet
+        served / energy-per-request / p99 latency, and per-tenant served /
+        energy / replicas-alive.
+        """
+        import functools
+
+        from repro.mc.ensemble import routed_ensemble
+        from repro.mc.intervals import ci_dict
+
+        counts = self._sample_counts(
+            horizon_ms, dt_ms, seed, n_seeds=n_seeds, jitter=jitter,
+            max_arrivals=max_arrivals,
+        )
+        ens = routed_ensemble(
+            self.params, counts, dt_ms,
+            queue_capacity=queue_capacity, keep_device_samples=True,
+        )
+        _ci = functools.partial(ci_dict, confidence=confidence)
+
+        out = {
+            "n_seeds": n_seeds,
+            "jitter": jitter,
+            "confidence": confidence,
+            "horizon_ms": horizon_ms,
+            "dt_ms": dt_ms,
+            "fleet": {
+                "served": _ci(ens.served),
+                "energy_per_request_mj": _ci(ens.energy_per_request_mj),
+                "p99_latency_ms": _ci(ens.p99_latency_ms),
+                "devices_alive": _ci(ens.devices_alive),
+            },
+            "tenants": {},
+        }
+        served = ens.per_device_served          # (S, N)
+        energy = ens.per_device_energy_mj       # (S, N)
+        for t, (a, b) in zip(self.tenants, self.blocks):
+            t_served = served[:, a:b].sum(axis=1)
+            t_energy = energy[:, a:b].sum(axis=1)
+            with np.errstate(invalid="ignore", divide="ignore"):
+                t_epr = np.where(t_served > 0, t_energy / np.maximum(t_served, 1), np.nan)
+            out["tenants"][t.name] = {
+                "policy": t.policy,
+                "replicas": t.replicas,
+                "served": _ci(t_served),
+                "energy_mj": _ci(t_energy),
+                "energy_per_request_mj": _ci(t_epr),
             }
         return out

@@ -7,6 +7,7 @@ import pytest
 
 from repro.core.arrivals import (
     DeterministicArrivals,
+    JitteredArrivals,
     MMPPArrivals,
     PoissonArrivals,
     TraceArrivals,
@@ -94,10 +95,85 @@ class TestTrace:
             TraceArrivals(())
 
 
+class TestValidationRegressions:
+    """NaN rates and zero-length-burst degeneracies used to sail through the
+    naive `<= 0` / `< 1` guards (every comparison with NaN is False) and
+    then poison whole fleet scans; they must fail fast now."""
+
+    NAN = float("nan")
+
+    @pytest.mark.parametrize("bad", [NAN, float("inf"), 0.0, -1.0],
+                             ids=["nan", "inf", "zero", "negative"])
+    def test_rate_constants_rejected(self, bad):
+        for ctor in (
+            lambda: DeterministicArrivals(bad),
+            lambda: JitteredArrivals(bad, 0.1),
+            lambda: PoissonArrivals(bad),
+            lambda: MMPPArrivals(bad, 10.0),
+            lambda: MMPPArrivals(10.0, bad),
+        ):
+            with pytest.raises(ValueError):
+                ctor()
+
+    def test_mmpp_nan_and_zero_length_dwells_rejected(self):
+        with pytest.raises(ValueError, match="zero-length bursts"):
+            MMPPArrivals(5.0, 100.0, mean_burst_len=self.NAN)
+        with pytest.raises(ValueError, match="zero-length bursts"):
+            MMPPArrivals(5.0, 100.0, mean_quiet_len=0.0)
+        with pytest.raises(ValueError, match="zero-length bursts"):
+            MMPPArrivals(5.0, 100.0, mean_burst_len=0.5)
+
+    def test_jittered_nan_jitter_rejected(self):
+        with pytest.raises(ValueError):
+            JitteredArrivals(40.0, self.NAN)
+        with pytest.raises(ValueError):
+            JitteredArrivals(40.0, -0.1)
+
+    def test_trace_nan_gap_rejected(self):
+        with pytest.raises(ValueError, match="finite"):
+            TraceArrivals((10.0, self.NAN, 20.0))
+        with pytest.raises(ValueError):
+            TraceArrivals((float("inf"),))
+
+    def test_trace_all_zero_gaps_rejected(self):
+        with pytest.raises(ValueError, match="all zero"):
+            TraceArrivals((0.0, 0.0, 0.0))
+        # individual zero gaps (simultaneous arrivals) stay legal
+        assert TraceArrivals((0.0, 5.0)).mean_period_ms() == 2.5
+
+    def test_nan_never_reaches_the_samplers(self):
+        """The regression scenario: a NaN rate propagating into sample_batch."""
+        import jax
+
+        proc = PoissonArrivals(10.0)
+        t = np.asarray(proc.sample_batch(jax.random.PRNGKey(0), 4, 100.0))
+        assert not np.any(np.isnan(t))
+
+
+class TestJittered:
+    def test_zero_jitter_is_deterministic(self):
+        np.testing.assert_array_equal(
+            JitteredArrivals(40.0, 0.0).inter_arrival_times(10, seed=3),
+            DeterministicArrivals(40.0).inter_arrival_times(10, seed=3),
+        )
+
+    def test_gaps_non_negative_even_at_large_jitter(self):
+        g = JitteredArrivals(10.0, 0.9).inter_arrival_times(5000, seed=4)
+        assert np.all(g >= 0.0)
+
+    def test_mean_period(self):
+        proc = JitteredArrivals(25.0, 0.1)
+        assert proc.mean_period_ms() == 25.0
+        g = proc.inter_arrival_times(20_000, seed=5)
+        assert np.mean(g) == pytest.approx(25.0, rel=0.01)
+
+
 class TestFactory:
     def test_known_kinds(self):
         assert isinstance(make_process("deterministic", period_ms=10.0),
                           DeterministicArrivals)
+        assert isinstance(make_process("jittered", period_ms=10.0, jitter=0.1),
+                          JitteredArrivals)
         assert isinstance(make_process("poisson", mean_ms=10.0), PoissonArrivals)
         assert isinstance(make_process("bursty", burst_ms=1.0, quiet_ms=10.0),
                           MMPPArrivals)

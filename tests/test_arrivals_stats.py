@@ -1,0 +1,162 @@
+"""Statistical conformance of the vectorized arrival samplers.
+
+The fleet and Monte Carlo engines consume
+:meth:`repro.core.arrivals.ArrivalProcess.sample_batch` /
+:meth:`~repro.core.arrivals.ArrivalProcess.sample_gaps` streams; the shape
+and padding contracts are covered by ``tests/test_arrivals.py``.  This
+module asserts the *distributions*: Poisson gaps must match the exponential
+mean AND variance (and pass a chi-square goodness-of-fit), MMPP must match
+its stationary rate and burstiness index, deterministic streams must have
+exactly zero variance.  Everything is seeded, so the checks are
+deterministic regressions, with acceptance bands set at ≥ 4σ of the
+estimator noise.
+"""
+import math
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.arrivals import (
+    DeterministicArrivals,
+    JitteredArrivals,
+    MMPPArrivals,
+    PoissonArrivals,
+    bin_arrival_counts,
+)
+
+#: chi-square critical values at p = 0.999 (upper tail), by degrees of freedom.
+CHI2_999 = {9: 27.877, 19: 43.820}
+
+
+def chi_square_statistic(samples: np.ndarray, edges: np.ndarray,
+                         probs: np.ndarray) -> float:
+    """Pearson χ² of ``samples`` against the bin probabilities ``probs``."""
+    counts, _ = np.histogram(samples, bins=edges)
+    expected = probs * samples.size
+    return float(np.sum((counts - expected) ** 2 / expected))
+
+
+def batch_gaps(proc, n_streams, n_gaps, seed=0) -> np.ndarray:
+    return np.asarray(proc.sample_gaps(jax.random.PRNGKey(seed), n_streams, n_gaps))
+
+
+class TestPoissonConformance:
+    MEAN = 40.0
+    N = 256 * 400          # 102k gaps
+
+    def _gaps(self, seed=0):
+        return batch_gaps(PoissonArrivals(self.MEAN), 256, 400, seed).ravel()
+
+    def test_mean(self):
+        g = self._gaps()
+        # exponential: sd of the sample mean is m/sqrt(n)
+        tol = 4.0 * self.MEAN / math.sqrt(g.size)
+        assert abs(g.mean() - self.MEAN) < tol
+
+    def test_variance(self):
+        g = self._gaps(seed=1)
+        # exponential: Var = m²; sd of the sample variance ≈ m²·sqrt(8/n)
+        tol = 5.0 * self.MEAN**2 * math.sqrt(8.0 / g.size)
+        assert abs(g.var(ddof=1) - self.MEAN**2) < tol
+
+    def test_chi_square_goodness_of_fit(self):
+        """Gaps against the exponential CDF over 10 equiprobable bins."""
+        g = self._gaps(seed=2)
+        q = np.linspace(0.0, 1.0, 11)
+        edges = -self.MEAN * np.log1p(-q[:-1])
+        edges = np.append(edges, np.inf)
+        chi2 = chi_square_statistic(g, edges, np.full(10, 0.1))
+        assert chi2 < CHI2_999[9]
+
+    def test_memoryless_cv_is_one(self):
+        g = self._gaps(seed=3)
+        assert g.std() / g.mean() == pytest.approx(1.0, abs=0.02)
+
+    def test_binned_counts_are_poisson_dispersed(self):
+        """bin_arrival_counts of a Poisson stream: index of dispersion ≈ 1."""
+        proc = PoissonArrivals(25.0)
+        t = proc.sample_batch(jax.random.PRNGKey(4), 64, 50_000.0,
+                              include_origin=False)
+        c = np.asarray(bin_arrival_counts(t, 50_000.0, 500.0)).ravel()
+        dispersion = c.var(ddof=1) / c.mean()
+        # counts per bin λ = 20 over 6400 bins: D sd ≈ sqrt(2/n)
+        assert dispersion == pytest.approx(1.0, abs=5.0 * math.sqrt(2.0 / c.size) + 0.02)
+
+
+class TestMMPPConformance:
+    BURST, QUIET, LB, LQ = 5.0, 500.0, 8.0, 2.0
+
+    def _proc(self):
+        return MMPPArrivals(self.BURST, self.QUIET,
+                            mean_burst_len=self.LB, mean_quiet_len=self.LQ)
+
+    def _stationary_cv2(self) -> float:
+        """CV² of the stationary gap mixture: state ∝ mean dwell length."""
+        pb = self.LB / (self.LB + self.LQ)
+        pq = 1.0 - pb
+        m1 = pb * self.BURST + pq * self.QUIET
+        m2 = pb * 2.0 * self.BURST**2 + pq * 2.0 * self.QUIET**2
+        return m2 / m1**2 - 1.0
+
+    def test_stationary_rate(self):
+        proc = self._proc()
+        g = batch_gaps(proc, 256, 400, seed=5).ravel()
+        # gaps are Markov-correlated: allow a generous 5% band on the mean
+        assert g.mean() == pytest.approx(proc.mean_period_ms(), rel=0.05)
+
+    def test_burstiness_index(self):
+        """Empirical CV² against the stationary-mixture closed form."""
+        g = batch_gaps(self._proc(), 512, 400, seed=6).ravel()
+        cv2 = g.var(ddof=1) / g.mean() ** 2
+        assert cv2 == pytest.approx(self._stationary_cv2(), rel=0.2)
+        assert cv2 > 1.5          # well above Poisson's 1: genuinely bursty
+
+    def test_counts_overdispersed(self):
+        proc = self._proc()
+        t = proc.sample_batch(jax.random.PRNGKey(7), 64, 100_000.0,
+                              max_arrivals=4096, include_origin=False)
+        c = np.asarray(bin_arrival_counts(t, 100_000.0, 1000.0)).ravel()
+        assert c.var(ddof=1) / c.mean() > 1.5
+
+    def test_scalar_and_batch_agree(self):
+        proc = self._proc()
+        scalar = np.concatenate(
+            [proc.inter_arrival_times(2000, seed=s) for s in range(8)]
+        )
+        batch = batch_gaps(proc, 64, 400, seed=8).ravel()
+        assert batch.mean() == pytest.approx(scalar.mean(), rel=0.1)
+        cv_b = batch.std() / batch.mean()
+        cv_s = scalar.std() / scalar.mean()
+        assert cv_b == pytest.approx(cv_s, rel=0.2)
+
+
+class TestDeterministicConformance:
+    def test_zero_variance_exactly(self):
+        g = batch_gaps(DeterministicArrivals(40.0), 32, 200)
+        assert float(g.var()) == 0.0
+        assert np.all(g == 40.0)
+
+    def test_jittered_zero_is_deterministic(self):
+        g = batch_gaps(JitteredArrivals(40.0, 0.0), 32, 200)
+        assert float(g.var()) == 0.0
+        assert np.all(g == 40.0)
+
+    def test_jittered_matches_requested_noise(self):
+        g = batch_gaps(JitteredArrivals(40.0, 0.05), 256, 400, seed=9).ravel()
+        assert g.mean() == pytest.approx(40.0, rel=0.005)
+        assert g.std() == pytest.approx(0.05 * 40.0, rel=0.05)
+
+    def test_jittered_chi_square_against_normal(self):
+        """Jittered gaps against the normal CDF over 10 equiprobable bins
+        (clipping at 0 is a ~5σ event at jitter 0.2 — negligible mass)."""
+        from statistics import NormalDist
+
+        jitter, period = 0.2, 40.0
+        g = batch_gaps(JitteredArrivals(period, jitter), 256, 400, seed=10).ravel()
+        nd = NormalDist(mu=period, sigma=jitter * period)
+        edges = np.array([-np.inf] + [nd.inv_cdf(k / 10) for k in range(1, 10)]
+                         + [np.inf])
+        chi2 = chi_square_statistic(g, edges, np.full(10, 0.1))
+        assert chi2 < CHI2_999[9]

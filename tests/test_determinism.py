@@ -1,0 +1,140 @@
+"""Determinism regressions for the fleet kernels.
+
+Two invariants the rest of the repo (and ``BENCH_*.json`` reproducibility)
+silently relies on, pinned here explicitly:
+
+* **jit transparency** — ``run_periodic`` / ``run_routed`` produce
+  bit-identical results with ``jit=True`` and ``jit=False`` (the jitted
+  scans contain no reassociable reductions, so XLA fusion must not perturb
+  a single ulp);
+* **device-order equivariance** — the per-device kernels carry no hidden
+  cross-device coupling: permuting devices (and their direct arrival
+  streams) permutes the results bit-for-bit, and under a balanced global
+  router every position receives the identical stream, so results are
+  independent of where in the fleet a device sits.
+"""
+import numpy as np
+import pytest
+
+from repro.fleet import DeviceSpec, FleetParams, run_periodic, run_routed, uniform_fleet
+from repro.core import energy_model as em
+from repro.core.phases import paper_lstm_item
+
+
+def mixed_specs(n=9, budget_mj=2500.0):
+    item = paper_lstm_item()
+    strategies = ("idle_waiting", "on_off", "adaptive")
+    periods = (40.0, 60.0, 90.0)
+    return [
+        DeviceSpec(
+            item=item,
+            strategy=strategies[i % 3],
+            request_period_ms=periods[(i // 3) % 3],
+            e_budget_mj=budget_mj,
+            powerup_overhead_mj=em.CALIBRATED_POWERUP_OVERHEAD_MJ,
+        )
+        for i in range(n)
+    ]
+
+
+def _routed_arrays(result):
+    s = result.state
+    return {
+        "n_served": np.asarray(s.n_served),
+        "energy_mj": np.asarray(s.energy_mj),
+        "n_configs": np.asarray(s.n_configs),
+        "n_released": np.asarray(s.n_released),
+        "n_dropped": np.asarray(s.n_dropped),
+        "alive": np.asarray(s.alive),
+        "completion_ms": np.asarray(s.completion_ms),
+        "latency_ms": result.latency_ms,
+        "served_mask": result.served_mask,
+    }
+
+
+class TestJitTransparency:
+    def test_run_periodic_bit_identical(self):
+        params = FleetParams.from_specs(mixed_specs())
+        a = run_periodic(params, 4000, jit=True)
+        b = run_periodic(params, 4000, jit=False)
+        np.testing.assert_array_equal(a.n_items, b.n_items)
+        np.testing.assert_array_equal(a.energy_mj, b.energy_mj)
+        np.testing.assert_array_equal(a.lifetime_ms, b.lifetime_ms)
+        np.testing.assert_array_equal(a.alive, b.alive)
+        np.testing.assert_array_equal(a.alive_over_time, b.alive_over_time)
+
+    @pytest.mark.parametrize("router", ["round_robin", "least_loaded", "power_aware"])
+    def test_run_routed_global_bit_identical(self, router):
+        params = FleetParams.from_specs(mixed_specs())
+        counts = np.random.default_rng(0).poisson(2.0, 300).astype(np.int32)
+        a = run_routed(params, counts, 15.0, router=router, jit=True)
+        b = run_routed(params, counts, 15.0, router=router, jit=False)
+        for key, va in _routed_arrays(a).items():
+            np.testing.assert_array_equal(va, _routed_arrays(b)[key], err_msg=key)
+
+    def test_run_routed_direct_bit_identical(self):
+        params = FleetParams.from_specs(mixed_specs())
+        counts = np.random.default_rng(1).poisson(0.3, (300, 9)).astype(np.int32)
+        a = run_routed(params, counts, 15.0, router=None, jit=True)
+        b = run_routed(params, counts, 15.0, router=None, jit=False)
+        for key, va in _routed_arrays(a).items():
+            np.testing.assert_array_equal(va, _routed_arrays(b)[key], err_msg=key)
+
+
+class TestDeviceOrderEquivariance:
+    def test_periodic_permutation_equivariant(self):
+        """Permuting a heterogeneous fleet permutes the results bit-for-bit."""
+        specs = mixed_specs()
+        perm = np.random.default_rng(2).permutation(len(specs))
+        a = run_periodic(FleetParams.from_specs(specs), 4000)
+        b = run_periodic(FleetParams.from_specs([specs[i] for i in perm]), 4000)
+        np.testing.assert_array_equal(a.n_items[perm], b.n_items)
+        np.testing.assert_array_equal(a.energy_mj[perm], b.energy_mj)
+        np.testing.assert_array_equal(a.alive[perm], b.alive)
+        # fleet-level trajectory is order-free
+        np.testing.assert_array_equal(a.alive_over_time, b.alive_over_time)
+
+    def test_routed_direct_permutation_equivariant(self):
+        """router=None: devices are fully independent, so permuting devices
+        together with their streams permutes every result bit-for-bit."""
+        specs = mixed_specs()
+        counts = np.random.default_rng(3).poisson(0.3, (300, 9)).astype(np.int32)
+        perm = np.random.default_rng(4).permutation(9)
+        a = run_routed(FleetParams.from_specs(specs), counts, 15.0, router=None)
+        b = run_routed(FleetParams.from_specs([specs[i] for i in perm]),
+                       counts[:, perm], 15.0, router=None)
+        arrays_a, arrays_b = _routed_arrays(a), _routed_arrays(b)
+        for key in ("n_served", "energy_mj", "n_configs", "alive", "completion_ms"):
+            np.testing.assert_array_equal(arrays_a[key][perm], arrays_b[key],
+                                          err_msg=key)
+        np.testing.assert_array_equal(arrays_a["latency_ms"][:, perm],
+                                      arrays_b["latency_ms"])
+
+    def test_routed_balanced_router_position_independent(self):
+        """With a global stream delivering exactly one request per device per
+        tick, round-robin hands every position the identical stream — so a
+        device's outcome must not depend on where in the fleet it sits."""
+        specs = mixed_specs()
+        n = len(specs)
+        counts = np.full(200, n, dtype=np.int32)
+        perm = np.random.default_rng(5).permutation(n)
+        a = run_routed(FleetParams.from_specs(specs), counts, 50.0,
+                       router="round_robin")
+        b = run_routed(FleetParams.from_specs([specs[i] for i in perm]), counts,
+                       50.0, router="round_robin")
+        arrays_a, arrays_b = _routed_arrays(a), _routed_arrays(b)
+        for key in ("n_served", "energy_mj", "n_configs", "alive"):
+            np.testing.assert_array_equal(arrays_a[key][perm], arrays_b[key],
+                                          err_msg=key)
+
+    def test_homogeneous_fleet_devices_identical_under_balanced_load(self):
+        """A homogeneous fleet under balanced traffic: every device's ledger
+        is identical, whatever its index."""
+        params = uniform_fleet(8, strategies=("idle_waiting",),
+                               request_period_ms=40.0, e_budget_mj=2000.0)
+        counts = np.full(300, 8, dtype=np.int32)
+        r = run_routed(params, counts, 40.0, router="round_robin")
+        served = np.asarray(r.state.n_served)
+        energy = np.asarray(r.state.energy_mj)
+        assert np.all(served == served[0])
+        assert np.all(energy == energy[0])

@@ -1,0 +1,426 @@
+"""Monte Carlo engine tests: streaming moments, intervals, calibration,
+deterministic limits, delta-vs-MC agreement, ensemble kernels, CLI."""
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import energy_model as em
+from repro.core.arrivals import DeterministicArrivals, JitteredArrivals, PoissonArrivals
+from repro.core.phases import paper_lstm_item
+from repro.fleet import uniform_fleet, run_periodic, run_routed
+from repro.mc import (
+    Welford,
+    bootstrap_interval,
+    cross_validate,
+    crossover_uncertainty,
+    config_energy_uncertainty,
+    energy_per_request_uncertainty,
+    lifetime_ratio_uncertainty,
+    normal_interval,
+    percentile_interval,
+    periodic_ensemble,
+    routed_ensemble,
+    run_periodic_ensemble,
+    run_routed_ensemble,
+    welford_interval,
+    z_value,
+)
+from repro.mc.ensemble import _merge_welford
+
+CAL = em.CALIBRATED_POWERUP_OVERHEAD_MJ
+ITEM = paper_lstm_item()
+#: the repo's exact closed-form crossover at the paper's M1+2 operating point
+CROSSOVER = em.crossover_period_ms(ITEM, idle_power_mw=24.0, powerup_overhead_mj=CAL)
+
+
+def small_fleet(n=6, budget_mj=3000.0, period=40.0):
+    return uniform_fleet(
+        n, strategies=("idle_waiting", "on_off", "adaptive"),
+        request_period_ms=period, e_budget_mj=budget_mj,
+        powerup_overhead_mj=CAL,
+    )
+
+
+class TestWelford:
+    def test_chunked_equals_numpy(self):
+        rng = np.random.default_rng(0)
+        x = rng.normal(5.0, 2.0, size=(300, 7))
+        w = Welford()
+        for part in np.array_split(x, [17, 60, 171], axis=0):
+            w.update(part)
+        assert w.count == 300
+        np.testing.assert_allclose(w.mean, x.mean(axis=0), rtol=1e-12)
+        np.testing.assert_allclose(w.variance, x.var(axis=0, ddof=1), rtol=1e-10)
+        np.testing.assert_allclose(w.sem, x.std(axis=0, ddof=1) / math.sqrt(300),
+                                   rtol=1e-10)
+
+    def test_pairwise_merge(self):
+        rng = np.random.default_rng(1)
+        x = rng.exponential(3.0, size=(128, 4))
+        a = Welford().update(x[:40])
+        b = Welford().update(x[40:])
+        m = _merge_welford(a, b)
+        np.testing.assert_allclose(m.mean, x.mean(axis=0), rtol=1e-12)
+        np.testing.assert_allclose(m.variance, x.var(axis=0, ddof=1), rtol=1e-10)
+
+    def test_degenerate(self):
+        w = Welford().update(np.full((5, 3), 2.0))
+        assert np.all(w.variance == 0.0)
+        single = Welford().update(np.ones((1, 2)))
+        assert np.all(single.variance == 0.0)       # ddof guard
+
+
+class TestIntervals:
+    def test_z_value(self):
+        assert z_value(0.95) == pytest.approx(1.959964, abs=1e-5)
+        with pytest.raises(ValueError):
+            z_value(1.0)
+
+    def test_normal_interval_coverage_and_width(self):
+        rng = np.random.default_rng(2)
+        s = rng.normal(10.0, 3.0, 4096)
+        ci = normal_interval(s)
+        assert ci.covers(10.0)
+        assert ci.half_width == pytest.approx(1.96 * 3.0 / 64.0, rel=0.1)
+
+    def test_zero_variance_degenerates(self):
+        for build in (normal_interval, bootstrap_interval, percentile_interval):
+            ci = build(np.full(32, 499.06))
+            assert ci.lo == ci.mean == ci.hi == 499.06
+
+    def test_bootstrap_close_to_normal(self):
+        rng = np.random.default_rng(3)
+        s = rng.normal(0.0, 1.0, 2048)
+        cn = normal_interval(s)
+        cb = bootstrap_interval(s, n_boot=2000, seed=4)
+        assert cb.lo == pytest.approx(cn.lo, abs=0.02)
+        assert cb.hi == pytest.approx(cn.hi, abs=0.02)
+
+    def test_percentile_band_does_not_shrink(self):
+        rng = np.random.default_rng(5)
+        wide = percentile_interval(rng.normal(0, 1, 4096))
+        assert wide.half_width == pytest.approx(1.96, rel=0.1)
+
+    def test_rejects_bad_samples(self):
+        with pytest.raises(ValueError):
+            normal_interval([])
+        with pytest.raises(ValueError):
+            normal_interval([1.0, np.nan])
+
+    def test_ci_dict_tolerates_all_degenerate_samples(self):
+        """A launcher must emit null bands, not crash, when every
+        replication's metric is NaN (e.g. nothing served)."""
+        from repro.mc import ci_dict
+
+        assert ci_dict([np.nan, np.nan]) == {
+            "mean": None, "lo": None, "hi": None, "std": None, "n": 0,
+        }
+        band = ci_dict([np.nan, 2.0, 4.0])
+        assert band["n"] == 2 and band["mean"] == 3.0
+
+    def test_cli_ci_block_tolerates_all_degenerate_samples(self):
+        import argparse
+
+        from repro.launch.mc import _ci_block
+
+        args = argparse.Namespace(confidence=0.95, boot=50)
+        out = _ci_block(np.full(4, np.nan), args, delta_std=1.0)
+        assert out["n_degenerate"] == 4
+        assert out["normal"]["mean"] is None
+        assert out["delta"]["rel_disagreement"] is None
+
+    def test_welford_interval_matches_normal(self):
+        rng = np.random.default_rng(6)
+        x = rng.normal(7.0, 2.0, size=(512, 3))
+        w = Welford().update(x)
+        band = welford_interval(w)
+        ref = normal_interval(x[:, 0])
+        assert band["lo"][0] == pytest.approx(ref.lo, rel=1e-12)
+        assert band["hi"][0] == pytest.approx(ref.hi, rel=1e-12)
+
+
+class TestCrossoverCalibration:
+    """Satellite: at large S the 95% CI covers the deterministic 499.06 ms,
+    and CI width shrinks ~1/sqrt(S)."""
+
+    JITTER = 0.01
+
+    def _ci(self, n_seeds, seed):
+        u = crossover_uncertainty(ITEM, jitter=self.JITTER, n_seeds=n_seeds,
+                                  seed=seed, idle_power_mw=24.0,
+                                  powerup_overhead_mj=CAL)
+        return normal_interval(u["samples"])
+
+    def test_reference_value_is_the_paper_number(self):
+        assert round(CROSSOVER, 2) == 499.06
+
+    @pytest.mark.parametrize("n_seeds,seed", [(64, 10), (256, 11), (1024, 12)])
+    def test_ci_covers_deterministic_crossover(self, n_seeds, seed):
+        assert self._ci(n_seeds, seed).covers(CROSSOVER)
+
+    def test_width_shrinks_like_inverse_sqrt_s(self):
+        widths = {S: self._ci(S, seed).half_width
+                  for S, seed in ((64, 10), (256, 11), (1024, 12))}
+        # each 4x seed increase should halve the band, within sampling noise
+        assert widths[64] / widths[256] == pytest.approx(2.0, rel=0.35)
+        assert widths[256] / widths[1024] == pytest.approx(2.0, rel=0.35)
+
+    def test_zero_jitter_band_is_exact(self):
+        u = crossover_uncertainty(ITEM, jitter=0.0, n_seeds=32,
+                                  idle_power_mw=24.0, powerup_overhead_mj=CAL)
+        assert u["nominal_ms"] == CROSSOVER
+        assert np.all(u["samples"] == CROSSOVER)
+        ci = normal_interval(u["samples"])
+        assert ci.lo == ci.hi == CROSSOVER
+
+
+class TestDeltaVsMC:
+    """Acceptance: analytic delta-method bands agree with empirical MC bands
+    within 10% at small jitter."""
+
+    def test_crossover(self):
+        u = crossover_uncertainty(ITEM, jitter=0.02, n_seeds=4096, seed=0,
+                                  idle_power_mw=24.0, powerup_overhead_mj=CAL)
+        cv = cross_validate(u["samples"], u["delta_std"])
+        assert cv["rel_disagreement"] < 0.10
+
+    def test_lifetime_ratio(self):
+        u = lifetime_ratio_uncertainty(ITEM, jitter=0.02, n_seeds=4096, seed=1,
+                                       powerup_overhead_mj=CAL)
+        assert u["n_degenerate"] == 0
+        assert u["nominal"] == pytest.approx(u["nominal_smooth"], rel=1e-5)
+        cv = cross_validate(u["samples"], u["delta_std"])
+        assert cv["rel_disagreement"] < 0.10
+
+    def test_energy_per_request(self):
+        u = energy_per_request_uncertainty(ITEM, jitter=0.02, n_seeds=4096, seed=2,
+                                           powerup_overhead_mj=CAL)
+        cv = cross_validate(u["samples"], u["delta_std"])
+        assert cv["rel_disagreement"] < 0.10
+
+    def test_config_energy(self):
+        u = config_energy_uncertainty(jitter=0.02, n_seeds=2048, seed=3)
+        assert round(u["min_energy"]["nominal_mj"], 2) == 11.85
+        assert round(u["reduction_ratio"]["nominal"], 2) == 40.12
+        for block in (u["min_energy"], u["reduction_ratio"]):
+            cv = cross_validate(block["samples"], block["delta_std"])
+            assert cv["rel_disagreement"] < 0.10
+
+    def test_lifetime_ratio_zero_jitter_is_the_paper_number(self):
+        u = lifetime_ratio_uncertainty(ITEM, jitter=0.0, n_seeds=16,
+                                       powerup_overhead_mj=CAL)
+        assert np.all(u["samples"] == u["nominal"])
+        assert abs(u["nominal"] - 12.39) / 12.39 < 0.005
+
+
+class TestPeriodicEnsemble:
+    def test_deterministic_limit_equals_fleet_kernel(self):
+        params = small_fleet(n=6, budget_mj=5000.0)
+        ref = run_periodic(params, 6000)
+        for proc in (JitteredArrivals(40.0, 0.0), DeterministicArrivals(40.0)):
+            ens = run_periodic_ensemble(params, proc, 6000, n_seeds=3,
+                                        keep_device_samples=True)
+            np.testing.assert_array_equal(
+                ens.per_device_items, np.broadcast_to(ref.n_items, (3, 6))
+            )
+            # period 40.0 is exactly representable: Eq.-4 lifetimes are
+            # bit-identical, not merely close
+            np.testing.assert_array_equal(
+                ens.per_device_lifetime_ms, np.broadcast_to(ref.lifetime_ms, (3, 6))
+            )
+            np.testing.assert_allclose(
+                ens.per_device_energy_mj, np.broadcast_to(ref.energy_mj, (3, 6)),
+                rtol=1e-12,
+            )
+            assert np.all(ens.device_items.std == 0.0)
+
+    def test_deterministic_limit_ci_degenerates(self):
+        params = small_fleet(n=3, budget_mj=2000.0)
+        ens = run_periodic_ensemble(params, JitteredArrivals(40.0, 0.0), 2500, 8)
+        ci = normal_interval(ens.lifetime_ms)
+        assert ci.lo == ci.mean == ci.hi
+
+    def test_poisson_reproducible_and_seed_sensitive(self):
+        params = small_fleet(n=3, budget_mj=1500.0)
+        a = run_periodic_ensemble(params, PoissonArrivals(40.0), 1000, 16, seed=7)
+        b = run_periodic_ensemble(params, PoissonArrivals(40.0), 1000, 16, seed=7)
+        c = run_periodic_ensemble(params, PoissonArrivals(40.0), 1000, 16, seed=8)
+        np.testing.assert_array_equal(a.lifetime_ms, b.lifetime_ms)
+        np.testing.assert_array_equal(a.total_energy_mj, b.total_energy_mj)
+        assert not np.array_equal(a.lifetime_ms, c.lifetime_ms)
+
+    def test_welford_matches_kept_samples_across_chunks(self):
+        params = small_fleet(n=3, budget_mj=1500.0)
+        ens = run_periodic_ensemble(
+            params, PoissonArrivals(40.0), 800, 24, seed=3,
+            seed_chunk=7, keep_device_samples=True,
+        )
+        assert ens.per_device_items.shape == (24, 3)
+        np.testing.assert_allclose(
+            ens.device_lifetime_ms.mean, ens.per_device_lifetime_ms.mean(axis=0),
+            rtol=1e-12,
+        )
+        np.testing.assert_allclose(
+            ens.device_lifetime_ms.variance,
+            ens.per_device_lifetime_ms.var(axis=0, ddof=1),
+            rtol=1e-9,
+        )
+
+    def test_exhaustion_matches_closed_form_in_expectation(self):
+        # Idle-Waiting under Poisson gaps: E[idle energy per period] equals
+        # the deterministic value at the mean period (idle is linear in the
+        # gap), so mean admitted counts should sit near the Eq.-3 count
+        from repro.core.strategies import IdlePowerMethod
+
+        params = uniform_fleet(1, strategies=("idle_waiting",),
+                               method=IdlePowerMethod.METHOD1_2,
+                               request_period_ms=40.0, e_budget_mj=1500.0,
+                               powerup_overhead_mj=CAL)
+        n_exact = em.idlewait_n_max(ITEM, 40.0, 1500.0, idle_power_mw=24.0,
+                                    powerup_overhead_mj=CAL)
+        ens = run_periodic_ensemble(params, PoissonArrivals(40.0), 2500, 64, seed=5)
+        assert np.mean(ens.total_items) == pytest.approx(n_exact, rel=0.02)
+
+    def test_gap_shorter_than_execution_charges_no_negative_idle(self):
+        # all-zero-ish gaps: JitteredArrivals clips at 0 → idle span clamps
+        params = uniform_fleet(1, strategies=("idle_waiting",),
+                               request_period_ms=40.0, e_budget_mj=500.0,
+                               powerup_overhead_mj=CAL)
+        ens = run_periodic_ensemble(params, JitteredArrivals(40.0, 0.9), 500, 16,
+                                    keep_device_samples=True)
+        assert np.all(ens.per_device_energy_mj >= 0.0)
+        assert np.all(np.diff(np.sort(ens.total_energy_mj)) >= 0)
+
+    def test_validation(self):
+        params = small_fleet(n=3)
+        with pytest.raises(ValueError):
+            run_periodic_ensemble(params, PoissonArrivals(40.0), 100, 0)
+        with pytest.raises(ValueError):
+            run_periodic_ensemble(params, PoissonArrivals(40.0), 0, 4)
+        with pytest.raises(ValueError):
+            periodic_ensemble(params, np.ones((2, 10, 5)))     # wrong N
+
+
+class TestRoutedEnsemble:
+    def test_single_seed_equals_run_routed(self):
+        """One replication through the vmapped body is bit-identical to
+        run_routed on the same counts — the same scan body, batched."""
+        params = small_fleet(n=4, budget_mj=2000.0)
+        rng = np.random.default_rng(0)
+        counts = rng.poisson(0.25, size=(300, 4)).astype(np.int32)
+        ref = run_routed(params, counts, 10.0, router=None)
+        ens = routed_ensemble(params, counts[None], 10.0, keep_device_samples=True)
+        np.testing.assert_array_equal(ens.per_device_served[0], ref.n_served)
+        np.testing.assert_array_equal(ens.per_device_energy_mj[0], ref.energy_mj)
+
+    def test_sampled_ensemble_shapes_and_reproducibility(self):
+        params = small_fleet(n=6, budget_mj=2000.0)
+        a = run_routed_ensemble(params, PoissonArrivals(40.0), 3000.0, 10.0,
+                                n_seeds=10, seed=1, seed_chunk=4)
+        b = run_routed_ensemble(params, PoissonArrivals(40.0), 3000.0, 10.0,
+                                n_seeds=10, seed=1, seed_chunk=4)
+        assert a.served.shape == (10,)
+        np.testing.assert_array_equal(a.served, b.served)
+        np.testing.assert_array_equal(a.p99_latency_ms, b.p99_latency_ms)
+        assert np.all(np.isfinite(a.p99_latency_ms))
+        assert np.all(a.p50_latency_ms <= a.p99_latency_ms)
+        assert a.device_served.count == 10
+
+    def test_backend_run_mc_bands(self):
+        from repro.serving.fleet_backend import FleetBackend, FleetTenantSpec
+
+        tenants = [
+            FleetTenantSpec("interactive", 500.0, 0.2, 900.0, 0.05, 30.0,
+                            policy="auto", replicas=3, mean_period_ms=400.0,
+                            e_budget_mj=2000.0),
+            FleetTenantSpec("batch", 400.0, 0.1, 700.0, 0.03, 20.0,
+                            policy="on_off", replicas=2, mean_period_ms=900.0,
+                            e_budget_mj=1000.0),
+        ]
+        out = FleetBackend(tenants).run_mc(
+            horizon_ms=15_000.0, dt_ms=50.0, n_seeds=8, seed=2, jitter=0.05
+        )
+        assert out["n_seeds"] == 8
+        assert set(out["tenants"]) == {"interactive", "batch"}
+        fleet = out["fleet"]
+        assert fleet["served"]["n"] == 8
+        assert fleet["served"]["lo"] <= fleet["served"]["mean"] <= fleet["served"]["hi"]
+        for t in out["tenants"].values():
+            assert t["served"]["mean"] > 0
+
+    def test_backend_jitter_validation(self):
+        from repro.serving.fleet_backend import FleetBackend, FleetTenantSpec
+
+        be = FleetBackend([FleetTenantSpec("t", 500.0, 0.2, 900.0, 0.05, 30.0,
+                                           mean_period_ms=500.0)])
+        with pytest.raises(ValueError):
+            be.run_mc(1000.0, n_seeds=0)
+        with pytest.raises(ValueError):
+            be.run_mc(1000.0, n_seeds=2, jitter=float("nan"))
+
+
+@pytest.mark.slow
+class TestMcCli:
+    """End-to-end: the BENCH_mc.json contract (smoke-sized)."""
+
+    def test_smoke_payload(self, tmp_path):
+        from repro.launch.mc import main
+
+        out = tmp_path / "BENCH_mc.json"
+        assert main(["--smoke", "--out", str(out)]) == 0
+        payload = json.loads(out.read_text())
+        assert payload["kind"] == "mc"
+
+        ref = payload["headline"]["deterministic_reference"]
+        assert ref["crossover_exact"] is True
+        assert ref["crossover_matches_paper"] is True
+        assert ref["lifetime_ratio_exact"] is True
+        assert ref["lifetime_ratio_matches_paper"] is True
+        assert ref["energy_per_request_exact"] is True
+
+        for key in ("crossover_ms", "lifetime_ratio", "energy_per_request_mj",
+                    "config_energy_min_mj", "config_reduction_ratio"):
+            block = payload["headline"][key]
+            # the CI of the *mean* can sit a second-order bias away from the
+            # nominal at smoke S; the distribution band must cover it
+            assert block["distribution"]["lo"] <= block["nominal"] <= block["distribution"]["hi"]
+            assert block["normal"]["lo"] <= block["normal"]["mean"] <= block["normal"]["hi"]
+            # the 10% delta/MC agreement contract is asserted at full S in
+            # TestDeltaVsMC; at smoke S=128 the MC std estimate itself
+            # carries ~6% sampling noise, so only gate gross disagreement
+            assert block["delta"]["rel_disagreement"] < 0.25
+
+        assert payload["ensemble"]["n_seeds"] >= 2
+        assert payload["latency"]["p99_latency_ms"]["normal"]["mean"] > 0
+        tp = payload["throughput"]
+        assert tp["ensemble"]["seeds_per_s"] > tp["looped_baseline"]["seeds_per_s"]
+        assert tp["speedup_seeds_per_s"] > 1.0
+
+    def test_zero_jitter_deterministic_run(self, tmp_path):
+        from repro.launch.mc import main
+
+        out = tmp_path / "BENCH_mc0.json"
+        assert main(["--smoke", "--jitter", "0", "--process", "jittered",
+                     "--section", "headline,ensemble", "--out", str(out)]) == 0
+        payload = json.loads(out.read_text())
+        h = payload["headline"]
+        # zero jitter: every band collapses onto the deterministic numbers
+        assert h["crossover_ms"]["normal"]["lo"] == h["crossover_ms"]["normal"]["hi"]
+        assert h["crossover_ms"]["nominal"] == pytest.approx(499.06, abs=0.005)
+        assert h["lifetime_ratio"]["normal"]["lo"] == h["lifetime_ratio"]["normal"]["hi"]
+        assert payload["ensemble"]["deterministic_agrees_with_fleet_kernel"] is True
+
+    def test_zero_jitter_self_check_survives_non_dyadic_period(self, tmp_path):
+        """41.3 ms is not exactly representable: accumulated lifetimes
+        drift ~1 ulp/step from the kernel's n·T products, which must not
+        fail the deterministic self-check (counts stay exact)."""
+        from repro.launch.mc import main
+
+        out = tmp_path / "BENCH_mc_413.json"
+        assert main(["--smoke", "--jitter", "0", "--process", "jittered",
+                     "--period-ms", "41.3", "--section", "ensemble",
+                     "--out", str(out)]) == 0
+        payload = json.loads(out.read_text())
+        assert payload["ensemble"]["deterministic_agrees_with_fleet_kernel"] is True
