@@ -2,13 +2,29 @@
 
 (The Pallas kernels target TPU; interpret mode is a correctness harness,
 not a timing one — timings here are the XLA reference path, the derived
-column reports arithmetic intensity for the TPU roofline.)"""
+column reports arithmetic intensity for the TPU roofline.)
+
+:func:`measure` is the reusable entry point: it returns per-kernel wall
+microseconds at the pinned shapes in :data:`KERNEL_SHAPES`, which the cost
+layer (``repro.launch.costs``) pairs with the analytic counters in
+:mod:`repro.costs.counts` to calibrate achieved roofline efficiency.
+"""
 from __future__ import annotations
 
 import time
 
 import jax
 import jax.numpy as jnp
+
+#: Pinned benchmark shapes, keyed by kernel name.  The cost layer computes
+#: analytic FLOPs/bytes at exactly these shapes, so keep names and fields
+#: in sync with ``repro.launch.costs``.
+KERNEL_SHAPES: dict[str, dict[str, int]] = {
+    "flash_attention_xla": dict(batch=1, seq=1024, heads=8, kv_heads=2, head_dim=64),
+    "ssd_chunked_xla": dict(batch=1, seq=2048, heads=8, head_dim=64, groups=1, state=64),
+    "lstm_xla": dict(batch=1, seq=64, input_dim=6, hidden=20),
+    "dequant_int8_xla": dict(rows=1024, cols=4096),
+}
 
 
 def _time(f, *args, reps=5) -> float:
@@ -20,26 +36,37 @@ def _time(f, *args, reps=5) -> float:
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def rows() -> list[tuple[str, float, str]]:
-    out = []
+def measure(reps: int = 5) -> dict[str, dict]:
+    """Wall-clock microseconds per kernel at the pinned shapes.
+
+    Returns ``{name: {"us": float, "shape": dict, "note": str}}`` — the
+    machine-readable form of :func:`rows`, consumed by the cost CLI's
+    calibration section.
+    """
+    out: dict[str, dict] = {}
     key = jax.random.PRNGKey(0)
 
     # flash attention (XLA ref path)
     from repro.kernels.flash_attention import ops as attn
 
-    B, S, H, KVH, D = 1, 1024, 8, 2, 64
+    s = KERNEL_SHAPES["flash_attention_xla"]
+    B, S, H, KVH, D = s["batch"], s["seq"], s["heads"], s["kv_heads"], s["head_dim"]
     q = jax.random.normal(key, (B, S, H, D), jnp.bfloat16)
     k = jax.random.normal(key, (B, S, KVH, D), jnp.bfloat16)
     v = jax.random.normal(key, (B, S, KVH, D), jnp.bfloat16)
     f = jax.jit(lambda q, k, v: attn.attention(q, k, v, impl="xla"))
-    us = _time(f, q, k, v)
+    us = _time(f, q, k, v, reps=reps)
     flops = 4 * B * S * S * H * D
-    out.append(("flash_attention_xla", us, f"gflop={flops/1e9:.2f} S={S} H={H}"))
+    out["flash_attention_xla"] = {
+        "us": us, "shape": dict(s), "note": f"gflop={flops/1e9:.2f} S={S} H={H}",
+    }
 
     # SSD (chunked XLA path)
     from repro.kernels.ssd import ops as ssd
 
-    B2, S2, H2, P2, G2, N2 = 1, 2048, 8, 64, 1, 64
+    s = KERNEL_SHAPES["ssd_chunked_xla"]
+    B2, S2, H2, P2, G2, N2 = (s["batch"], s["seq"], s["heads"], s["head_dim"],
+                              s["groups"], s["state"])
     ks = jax.random.split(key, 6)
     x = jax.random.normal(ks[0], (B2, S2, H2, P2), jnp.bfloat16)
     dt = jax.nn.softplus(jax.random.normal(ks[1], (B2, S2, H2)))
@@ -48,27 +75,39 @@ def rows() -> list[tuple[str, float, str]]:
     cm = jax.random.normal(ks[4], (B2, S2, G2, N2))
     dv = jax.random.normal(ks[5], (H2,))
     g = jax.jit(lambda *a_: ssd.ssd(*a_, impl="xla")[0])
-    us = _time(g, x, dt, a, bm, cm, dv)
-    out.append(("ssd_chunked_xla", us, f"S={S2} H={H2} P={P2} N={N2}"))
+    us = _time(g, x, dt, a, bm, cm, dv, reps=reps)
+    out["ssd_chunked_xla"] = {
+        "us": us, "shape": dict(s), "note": f"S={S2} H={H2} P={P2} N={N2}",
+    }
 
     # LSTM (paper accelerator, XLA scan path)
     from repro.kernels.lstm import ops as lstm
 
-    B3, S3, I3, H3 = 1, 64, 6, 20
+    s = KERNEL_SHAPES["lstm_xla"]
+    B3, S3, I3, H3 = s["batch"], s["seq"], s["input_dim"], s["hidden"]
     x3 = jax.random.normal(key, (B3, S3, I3))
     wih = jax.random.normal(key, (I3, 4 * H3)) * 0.3
     whh = jax.random.normal(key, (H3, 4 * H3)) * 0.3
     b3 = jnp.zeros((4 * H3,))
     h = jax.jit(lambda *a_: lstm.lstm(*a_, impl="xla")[0])
-    us = _time(h, x3, wih, whh, b3)
-    out.append(("lstm_xla", us, f"paper h{H3} S={S3} (FPGA: 28.1 µs)"))
+    us = _time(h, x3, wih, whh, b3, reps=reps)
+    out["lstm_xla"] = {
+        "us": us, "shape": dict(s), "note": f"paper h{H3} S={S3} (FPGA: 28.1 µs)",
+    }
 
     # dequant (checkpoint decompression path)
     from repro.kernels.dequant import ops as dq
 
-    w = jax.random.normal(key, (1024, 4096))
+    s = KERNEL_SHAPES["dequant_int8_xla"]
+    w = jax.random.normal(key, (s["rows"], s["cols"]))
     qq, sc = dq.quantize_blocked(w)
     d = jax.jit(lambda q_, s_: dq.dequantize(q_, s_, impl="xla"))
-    us = _time(d, qq, sc)
-    out.append(("dequant_int8_xla", us, f"MB={w.size*2/1e6:.1f} (bf16 out)"))
+    us = _time(d, qq, sc, reps=reps)
+    out["dequant_int8_xla"] = {
+        "us": us, "shape": dict(s), "note": f"MB={w.size*2/1e6:.1f} (bf16 out)",
+    }
     return out
+
+
+def rows() -> list[tuple[str, float, str]]:
+    return [(name, rec["us"], rec["note"]) for name, rec in measure().items()]

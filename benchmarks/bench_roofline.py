@@ -9,8 +9,12 @@ import time
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
 
 
+def cache_path(mesh: str = "single") -> str:
+    return os.path.join(RESULTS, f"dryrun_{mesh}.json")
+
+
 def load(mesh: str = "single") -> dict:
-    path = os.path.join(RESULTS, f"dryrun_{mesh}.json")
+    path = cache_path(mesh)
     if not os.path.exists(path):
         return {}
     with open(path) as f:
@@ -18,6 +22,14 @@ def load(mesh: str = "single") -> dict:
 
 
 def table(mesh: str = "single", tag: str = "baseline") -> list[dict]:
+    path = cache_path(mesh)
+    if not os.path.exists(path):
+        # Explicit skip record, not a silent empty table: downstream
+        # consumers (rows(), BENCH JSON) must see *why* there are no cells.
+        return [{
+            "arch": "*", "shape": "*", "status": "skipped",
+            "reason": f"missing {path} — run python -m repro.launch.dryrun",
+        }]
     out = []
     for key, rec in sorted(load(mesh).items()):
         arch, shape, m, t = key.split("|")
@@ -45,10 +57,13 @@ def rows() -> list[tuple[str, float, str]]:
     out = []
     for mesh, tag in (("single", "baseline"), ("multi", "baseline"), ("single_opt", "optimized")):
         t0 = time.perf_counter()
-        tab = [r for r in table(mesh, tag) if r["status"] == "ok"]
+        tab_all = table(mesh, tag)
+        tab = [r for r in tab_all if r["status"] == "ok"]
         us = (time.perf_counter() - t0) * 1e6 / max(len(tab), 1)
         if not tab:
-            out.append((f"roofline[{mesh}]", us, "no dry-run cache"))
+            reason = next((r["reason"] for r in tab_all if r.get("reason")),
+                          "no ok cells in dry-run cache")
+            out.append((f"roofline[{mesh}]", us, f"skipped: {reason[:90]}"))
             continue
         worst = min(tab, key=lambda r: r["mfu_bound"])
         coll = max(tab, key=lambda r: r["collective_s"])

@@ -25,6 +25,13 @@ Example::
       kind: idle_waiting          # or on_off
       method: baseline            # baseline | method1 | method1+2
       powerup_overhead_mj: 0.12375
+
+An item may instead name a cost-zoo model (`repro.costs`) — the phases are
+then the model's roofline-calibrated request cost::
+
+    item:
+      model: mixtral-8x7b
+      batch: 8
 """
 from __future__ import annotations
 
@@ -107,11 +114,33 @@ class ExperimentSpec:
         strat = d.get("strategy", {})
         return ExperimentSpec(
             workload=WorkloadSpec.from_dict(d["workload"]),
-            item=WorkloadItem.from_dict(d["item"]),
+            item=_item_from_dict(d["item"]),
             strategy_kind=str(strat.get("kind", "idle_waiting")),
             method=IdlePowerMethod(strat.get("method", "baseline")),
             powerup_overhead_mj=float(strat.get("powerup_overhead_mj", 0.0)),
         )
+
+
+def _item_from_dict(d: Mapping) -> WorkloadItem:
+    """Item from either explicit phases or a cost-zoo model reference.
+
+    The model form prices the item through :mod:`repro.costs`::
+
+        item:
+          model: mixtral-8x7b      # registered arch or the paper LSTM
+          batch: 8                 # optional; plus prefill_len, decode_len,
+          profile: tpu-v5e-like    # profile, efficiency
+    """
+    if "model" in d:
+        if "phases" in d:
+            raise ValueError("item: give either 'model' or 'phases', not both")
+        from repro.costs import model_workload_item  # deferred: costs imports core
+
+        kwargs = {k: d[k] for k in
+                  ("batch", "prefill_len", "decode_len", "profile", "efficiency")
+                  if k in d}
+        return model_workload_item(str(d["model"]), **kwargs)
+    return WorkloadItem.from_dict(d)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,84 @@
+"""Roofline-calibrated per-model request costs (docs/costs.md).
+
+Fuses the seed's dormant half — the model zoo (`repro.configs`), the
+analytical roofline (`repro.launch.roofline`), and the kernel benchmarks —
+into the energy-simulation stack built in PRs 1–5: per-model, per-batch-size
+inference energy/latency become :class:`repro.core.phases.WorkloadItem`
+phases, so heterogeneous fleets of *actual models* run through
+``fleet.run_periodic``/``run_routed``, the optimizer, and the MC ensembles
+without any of those layers changing.
+
+Three layers:
+
+* :mod:`repro.costs.counts` — closed-form FLOPs/bytes per module
+  (attention / SSD / LSTM / dequant / FFN) and per request, in the HLO
+  parser's own conventions (pinned by ``tests/test_roofline_conformance.py``);
+* :mod:`repro.costs.calibrate` — accelerator profiles + roofline latency
+  and phase energies, with measured-kernel efficiency calibration;
+* :mod:`repro.costs.zoo` — the registry: ``model_request_cost`` /
+  ``model_device_spec`` / ``model_mix_fleet``, with the paper's LSTM as
+  the bit-exact zero-calibration limit.
+
+CLI: ``python -m repro.launch.costs`` → ``BENCH_costs.json``.
+"""
+from repro.costs.calibrate import (
+    DEFAULT_EFFICIENCY,
+    EDGE_ACCEL,
+    PROFILES,
+    TPU_V5E_LIKE,
+    AcceleratorProfile,
+    measured_efficiency,
+    request_item,
+    roofline_time_ms,
+)
+from repro.costs.counts import (
+    OpCounts,
+    RequestCounts,
+    attention_counts,
+    dequant_counts,
+    ffn_counts,
+    layer_counts,
+    lstm_counts,
+    matmul_counts,
+    request_counts,
+    ssd_counts,
+)
+from repro.costs.zoo import (
+    PAPER_LSTM_MODEL,
+    RequestCost,
+    default_profile,
+    model_device_spec,
+    model_mix_fleet,
+    model_names,
+    model_request_cost,
+    model_workload_item,
+)
+
+__all__ = [
+    "AcceleratorProfile",
+    "DEFAULT_EFFICIENCY",
+    "EDGE_ACCEL",
+    "OpCounts",
+    "PAPER_LSTM_MODEL",
+    "PROFILES",
+    "RequestCost",
+    "RequestCounts",
+    "TPU_V5E_LIKE",
+    "attention_counts",
+    "default_profile",
+    "dequant_counts",
+    "ffn_counts",
+    "layer_counts",
+    "lstm_counts",
+    "matmul_counts",
+    "measured_efficiency",
+    "model_device_spec",
+    "model_mix_fleet",
+    "model_names",
+    "model_request_cost",
+    "model_workload_item",
+    "request_counts",
+    "request_item",
+    "roofline_time_ms",
+    "ssd_counts",
+]

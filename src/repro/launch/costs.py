@@ -1,0 +1,307 @@
+"""Per-model request-cost CLI — the model zoo priced for the simulator.
+
+Emits ``BENCH_costs.json``:
+
+    costs        per (model × batch) roofline-calibrated request costs:
+                 FLOPs/bytes, latency, energy, config phase, crossover period
+    fleet        a heterogeneous model mix (≥3 real architectures) through
+                 ``fleet.run_periodic`` AND the MC ensemble with per-device
+                 traffic periods — the end-to-end acceptance path
+    calibration  measured XLA kernel timings (benchmarks.bench_kernels) vs
+                 the analytic roofline bounds → achieved-efficiency fractions
+    golden       the zero-calibration limit: the paper LSTM's request cost is
+                 the measured Table-2 item, reproducing 499.06 ms / 12.39×
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.costs --smoke
+    PYTHONPATH=src python -m repro.launch.costs --models mixtral-8x7b,qwen3-32b \
+        --batches 1,4,16 --profile tpu-v5e-like
+    PYTHONPATH=src python -m repro.launch.costs --no-kernels --out -
+"""
+from __future__ import annotations
+
+import sys
+
+from repro.launch._cli import Timer, emit, finish_payload, make_parser, parse_axis
+
+#: The default heterogeneous mix: datacenter MoE + edge SSM + small dense.
+DEFAULT_FLEET_MODELS = "mixtral-8x7b,mamba2-370m:2,qwen3-1.7b"
+
+
+def parse_models(spec: str) -> list[tuple[str, int]]:
+    """'a,b:2,c' → [(a,1), (b,2), (c,1)] — names with optional replicas."""
+    out = []
+    for tok in spec.split(","):
+        tok = tok.strip()
+        if not tok:
+            continue
+        name, _, reps = tok.partition(":")
+        out.append((name, int(reps) if reps else 1))
+    if not out:
+        raise SystemExit(f"--models parsed to nothing: {spec!r}")
+    return out
+
+
+def _section_costs(args) -> dict:
+    from repro.costs import model_names, model_request_cost
+
+    models = ([m for m, _ in parse_models(args.models)] if args.models
+              else model_names())
+    batches = [int(b) for b in parse_axis(args.batches)]
+    records = []
+    with Timer() as t:
+        for m in models:
+            for b in batches:
+                rc = model_request_cost(
+                    m, batch=b, prefill_len=args.prefill, decode_len=args.decode,
+                    profile=args.profile, efficiency=args.efficiency,
+                )
+                records.append(rc.to_dict())
+    return {
+        "prefill_len": args.prefill,
+        "decode_len": args.decode,
+        "efficiency": args.efficiency,
+        "records": records,
+        "throughput": {
+            "points": len(records),
+            "elapsed_s": round(t.elapsed_s, 6),
+            "pts_per_s": round(len(records) / t.elapsed_s, 1)
+            if t.elapsed_s > 0 else None,
+        },
+    }
+
+
+def _section_fleet(args) -> dict:
+    """The acceptance path: a ≥3-model mix end-to-end through the periodic
+    kernel and the MC ensemble, each device at its own model's period."""
+    import numpy as np
+
+    from repro.core.arrivals import JitteredArrivals
+    from repro.costs import model_mix_fleet
+    from repro.fleet import fleet_summary, run_periodic
+    from repro.mc import ci_dict, run_periodic_ensemble
+
+    mix = parse_models(args.fleet_models)
+    params = model_mix_fleet(
+        mix,
+        n_devices=args.devices,
+        e_budget_mj=args.budget_j * 1000.0,
+        utilization=args.utilization,
+        prefill_len=args.prefill,
+        decode_len=args.decode,
+        efficiency=args.efficiency,
+    )
+    n_steps = args.fleet_steps
+    run_periodic(params, n_steps)                       # warm-up: compile once
+    with Timer() as t:
+        res = run_periodic(params, n_steps)
+    summary = fleet_summary(res)
+
+    mean_t = float(np.asarray(params.period_ms).mean())
+    process = JitteredArrivals(mean_t, args.jitter)
+    with Timer() as t_ens:
+        ens = run_periodic_ensemble(
+            params, process, n_steps, args.n_seeds, seed=args.seed,
+            scale_to_device_periods=True,
+        )
+    return {
+        "models": [{"name": m, "replicas": r} for m, r in mix],
+        "devices": params.n_devices,
+        "n_steps": n_steps,
+        "period_ms_range": [
+            float(np.asarray(params.period_ms).min()),
+            float(np.asarray(params.period_ms).max()),
+        ],
+        "summary": summary,
+        "throughput": {
+            "elapsed_s": round(t.elapsed_s, 6),
+            "devices_per_s": round(params.n_devices / t.elapsed_s, 1)
+            if t.elapsed_s > 0 else None,
+        },
+        "ensemble": {
+            "process": process.name,
+            "jitter": args.jitter,
+            "n_seeds": ens.n_seeds,
+            "scale_to_device_periods": True,
+            "total_items": ci_dict(ens.total_items),
+            "lifetime_ms": ci_dict(ens.lifetime_ms),
+            "energy_per_request_mj": ci_dict(ens.energy_per_request_mj),
+            "throughput": {
+                "elapsed_s": round(t_ens.elapsed_s, 6),
+                "seeds_per_s": round(ens.n_seeds / t_ens.elapsed_s, 1)
+                if t_ens.elapsed_s > 0 else None,
+            },
+        },
+    }
+
+
+def _section_calibration(args) -> dict:
+    """Measured kernel wall time vs the analytic roofline bound at the
+    pinned bench shapes → achieved-efficiency fraction per kernel."""
+    try:
+        from benchmarks.bench_kernels import measure
+    except ImportError as e:
+        # benchmarks/ lives next to src/, importable from the repo root only
+        return {"status": "skipped",
+                "reason": f"benchmarks package not importable ({e}); "
+                          "run from the repo root"}
+
+    from repro.costs import (
+        attention_counts,
+        dequant_counts,
+        lstm_counts,
+        measured_efficiency,
+        ssd_counts,
+    )
+    from repro.launch.roofline import HBM_BW, PEAK_FLOPS_BF16
+
+    with Timer() as t:
+        measured = measure(reps=2 if args.smoke else 5)
+    analytic = {}
+    for name, rec in measured.items():
+        s = rec["shape"]
+        if name == "flash_attention_xla":
+            analytic[name] = attention_counts(
+                s["batch"], s["seq"], s["seq"], s["heads"], s["head_dim"],
+                num_kv_heads=s["kv_heads"],
+            )
+        elif name == "ssd_chunked_xla":
+            analytic[name] = ssd_counts(
+                s["batch"], s["seq"], s["heads"], s["head_dim"], s["state"],
+                num_groups=s["groups"],
+            )
+        elif name == "lstm_xla":
+            analytic[name] = lstm_counts(
+                s["batch"], s["seq"], s["input_dim"], s["hidden"]
+            )
+        elif name == "dequant_int8_xla":
+            analytic[name] = dequant_counts(s["rows"], s["cols"])
+    eff = measured_efficiency(
+        analytic, {k: v["us"] for k, v in measured.items()},
+        PEAK_FLOPS_BF16, HBM_BW,
+    )
+    return {
+        "note": "CPU XLA wall time vs TPU-class roofline bound — efficiencies "
+                "are lower bounds for documenting the calibration *mechanism*; "
+                "on-target timings slot in via measured_efficiency()",
+        "elapsed_s": round(t.elapsed_s, 6),
+        "kernels": {
+            name: {
+                "us": round(rec["us"], 2),
+                "shape": rec["shape"],
+                "flops": analytic[name].flops,
+                "hbm_bytes": analytic[name].hbm_bytes,
+                "efficiency": eff.get(name),
+            }
+            for name, rec in measured.items()
+            if name in analytic
+        },
+    }
+
+
+def _section_golden() -> dict:
+    """Zero-calibration limit: the paper LSTM's cost IS Table 2."""
+    from repro.core import energy_model as em
+    from repro.core.phases import paper_lstm_item
+    from repro.costs import PAPER_LSTM_MODEL, model_request_cost
+
+    rc = model_request_cost(PAPER_LSTM_MODEL)
+    item = paper_lstm_item()
+    return {
+        "model": PAPER_LSTM_MODEL,
+        "source": rc.source,
+        "item_matches_table2": rc.item == item,
+        "crossover_ms": round(
+            em.crossover_period_ms(
+                item, idle_power_mw=24.0,
+                powerup_overhead_mj=em.CALIBRATED_POWERUP_OVERHEAD_MJ,
+            ), 2,
+        ),
+        "lifetime_ratio_40ms": round(
+            em.lifetime_ratio(
+                item, 40.0, idle_power_mw=24.0,
+                powerup_overhead_mj=em.CALIBRATED_POWERUP_OVERHEAD_MJ,
+            ), 2,
+        ),
+    }
+
+
+def main(argv=None) -> int:
+    ap = make_parser(
+        prog="python -m repro.launch.costs",
+        description="Roofline-calibrated per-model request costs (BENCH_costs.json).",
+        jit_flag=False,
+        out_default="BENCH_costs.json",
+    )
+    ap.add_argument("--models", default=None,
+                    help="comma list for the cost table (default: all zoo models)")
+    ap.add_argument("--batches", default="1,8", help="batch axis: list or a:b:step")
+    ap.add_argument("--prefill", type=int, default=2048)
+    ap.add_argument("--decode", type=int, default=128)
+    ap.add_argument("--profile", default=None,
+                    help="force one accelerator profile (default: per-model)")
+    ap.add_argument("--efficiency", type=float, default=None,
+                    help="achieved roofline fraction (default 0.5)")
+    ap.add_argument("--fleet-models", default=DEFAULT_FLEET_MODELS,
+                    help="heterogeneous mix, name[:replicas] comma list")
+    ap.add_argument("--devices", type=int, default=64,
+                    help="fleet size (mix tiled cyclically)")
+    ap.add_argument("--fleet-steps", type=int, default=200,
+                    help="request periods per device in the fleet section")
+    ap.add_argument("--utilization", type=float, default=0.25,
+                    help="per-device busy fraction setting each model's period")
+    ap.add_argument("--budget-j", type=float, default=50_000.0,
+                    help="per-device energy budget (J)")
+    ap.add_argument("--jitter", type=float, default=0.1,
+                    help="request-timing jitter in the MC ensemble section")
+    ap.add_argument("--n-seeds", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-kernels", dest="kernels", action="store_false",
+                    help="skip the measured-kernel calibration section")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: tiny fleet, few seeds, 2-rep kernels")
+    args = ap.parse_args(argv)
+
+    if args.efficiency is None:
+        from repro.costs import DEFAULT_EFFICIENCY
+
+        args.efficiency = DEFAULT_EFFICIENCY
+    if args.smoke:
+        args.devices = min(args.devices, 16)
+        args.fleet_steps = min(args.fleet_steps, 50)
+        args.n_seeds = min(args.n_seeds, 16)
+
+    with Timer() as total:
+        payload: dict = {
+            "kind": "costs",
+            "config": {
+                k: getattr(args, k)
+                for k in ("models", "batches", "prefill", "decode", "profile",
+                          "efficiency", "fleet_models", "devices", "fleet_steps",
+                          "utilization", "budget_j", "jitter", "n_seeds", "seed",
+                          "kernels", "smoke")
+            },
+            "costs": _section_costs(args),
+            "fleet": _section_fleet(args),
+            "golden": _section_golden(),
+        }
+        if args.kernels:
+            payload["calibration"] = _section_calibration(args)
+
+    payload["size"] = payload["costs"]["throughput"]["points"]
+    finish_payload(payload, total.elapsed_s)
+    emit(payload, None if args.out == "-" else args.out, label="cost table")
+    g = payload["golden"]
+    print(
+        f"costs: {payload['size']} (model x batch) points | fleet "
+        f"{payload['fleet']['devices']} devices x {payload['fleet']['n_steps']} steps "
+        f"({len(payload['fleet']['models'])}-model mix) | golden: table2 match="
+        f"{g['item_matches_table2']} crossover={g['crossover_ms']} ms "
+        f"lifetime={g['lifetime_ratio_40ms']}x"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

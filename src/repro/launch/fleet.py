@@ -33,6 +33,19 @@ def _build_params(args):
     from repro.core.strategies import IdlePowerMethod
     from repro.fleet import uniform_fleet
 
+    if args.models:
+        # heterogeneous model fleet from the cost zoo; each device's request
+        # period comes from its model's latency (see repro.costs)
+        from repro.costs import model_mix_fleet
+        from repro.launch.costs import parse_models
+
+        return model_mix_fleet(
+            parse_models(args.models),
+            n_devices=args.devices,
+            strategy="adaptive" if args.strategy == "mix" else args.strategy,
+            e_budget_mj=args.budget_j * 1000.0,
+            powerup_overhead_mj=powerup_overhead_mj(args),
+        )
     strategies = (
         ("on_off", "idle_waiting", "adaptive")
         if args.strategy == "mix"
@@ -133,7 +146,10 @@ def _uncertainty_section(args, params, n_steps: int) -> dict:
     from repro.core.arrivals import JitteredArrivals, MMPPArrivals, PoissonArrivals
     from repro.mc import ci_dict, run_periodic_ensemble, welford_interval
 
-    t = args.period_ms
+    # heterogeneous model fleets: the process carries the traffic *shape*
+    # at the fleet-mean period; per-device rates come from rescaling
+    t = (float(np.asarray(params.period_ms).mean()) if args.models
+         else args.period_ms)
     if args.process == "poisson":
         process = PoissonArrivals(t)
     elif args.process == "mmpp":
@@ -142,7 +158,8 @@ def _uncertainty_section(args, params, n_steps: int) -> dict:
     else:
         process = JitteredArrivals(t, args.jitter)
     ens = run_periodic_ensemble(
-        params, process, n_steps, args.n_seeds, seed=args.seed
+        params, process, n_steps, args.n_seeds, seed=args.seed,
+        scale_to_device_periods=bool(args.models),
     )
 
     dev = welford_interval(ens.device_lifetime_ms)
@@ -212,6 +229,11 @@ def main(argv=None) -> int:
         out_default="BENCH_fleet.json",
     )
     ap.add_argument("--devices", type=int, default=4096)
+    ap.add_argument("--models", default=None,
+                    help="heterogeneous fleet from the cost zoo: name[:replicas] "
+                         "comma list (e.g. mixtral-8x7b,mamba2-370m:2); each "
+                         "device runs at its own model's request period, and "
+                         "the paper-item looped baseline is skipped")
     ap.add_argument("--horizon", type=float, default=10.0, help="simulated seconds")
     ap.add_argument("--mode", choices=["routed", "periodic"], default="routed")
     ap.add_argument("--router", default="round_robin",
@@ -321,26 +343,31 @@ def main(argv=None) -> int:
         run_periodic(params, n_steps_p)
         periodic_elapsed = time.perf_counter() - t0
 
-    saved_dt = args.dt_ms
-    args.dt_ms = args.period_ms
-    base_elapsed, base_served = _baseline_loop(
-        args, np.full(n_steps_p, n_baseline, dtype=np.int32), n_baseline
-    )
-    args.dt_ms = saved_dt
-
     fleet_tp = _tp(periodic_elapsed, args.devices, n_steps_p)
-    base_tp = _tp(base_elapsed, n_baseline, n_steps_p)
-    base_tp["requests_served"] = base_served
-    payload["throughput"] = {
-        "periodic": {
-            "fleet": fleet_tp,
-            "looped_baseline": base_tp,
-            "speedup_devices_per_s": round(
-                fleet_tp["devices_per_s"] / base_tp["devices_per_s"], 1
-            ) if base_tp["devices_per_s"] else None,
-        },
-    }
-    if args.mode == "routed":
+    if args.models:
+        # no looped baseline: the scalar loop simulates the paper item, not
+        # the model mix — a same-workload comparison doesn't exist here
+        payload["throughput"] = {"periodic": {"fleet": fleet_tp}}
+    else:
+        saved_dt = args.dt_ms
+        args.dt_ms = args.period_ms
+        base_elapsed, base_served = _baseline_loop(
+            args, np.full(n_steps_p, n_baseline, dtype=np.int32), n_baseline
+        )
+        args.dt_ms = saved_dt
+
+        base_tp = _tp(base_elapsed, n_baseline, n_steps_p)
+        base_tp["requests_served"] = base_served
+        payload["throughput"] = {
+            "periodic": {
+                "fleet": fleet_tp,
+                "looped_baseline": base_tp,
+                "speedup_devices_per_s": round(
+                    fleet_tp["devices_per_s"] / base_tp["devices_per_s"], 1
+                ) if base_tp["devices_per_s"] else None,
+            },
+        }
+    if args.mode == "routed" and not args.models:
         base_args = argparse.Namespace(**vars(args))
         base_args.devices = n_baseline
         rbase_elapsed, rbase_served = _baseline_loop(
@@ -366,12 +393,19 @@ def main(argv=None) -> int:
 
     emit(payload, args.out, label="fleet summary")
     tp = payload["throughput"]["periodic"]
-    print(
-        f"fleet[{args.mode}] {args.devices} devices x {n_steps} steps | "
-        f"periodic kernel: {tp['fleet']['devices_per_s']} devices/s vs looped "
-        f"baseline ({n_baseline} devices) {tp['looped_baseline']['devices_per_s']} "
-        f"devices/s -> speedup {tp['speedup_devices_per_s']}x"
-    )
+    if "looped_baseline" in tp:
+        print(
+            f"fleet[{args.mode}] {args.devices} devices x {n_steps} steps | "
+            f"periodic kernel: {tp['fleet']['devices_per_s']} devices/s vs looped "
+            f"baseline ({n_baseline} devices) {tp['looped_baseline']['devices_per_s']} "
+            f"devices/s -> speedup {tp['speedup_devices_per_s']}x"
+        )
+    else:
+        print(
+            f"fleet[{args.mode}] {args.devices} devices x {n_steps} steps "
+            f"({args.models}) | periodic kernel: "
+            f"{tp['fleet']['devices_per_s']} devices/s"
+        )
     if "routed" in payload["throughput"]:
         rt = payload["throughput"]["routed"]
         print(

@@ -315,9 +315,19 @@ def run_periodic_ensemble(
     seed_chunk: Optional[int] = None,
     keep_device_samples: bool = False,
     jit: bool = True,
+    scale_to_device_periods: bool = False,
 ) -> PeriodicEnsembleResult:
     """Replicate an N-device duty-cycle fleet over ``n_seeds`` independent
     request streams drawn from ``process``.
+
+    Heterogeneous fleets: with ``scale_to_device_periods=True`` every
+    device's sampled gaps are rescaled by ``params.period_ms[d] /
+    process.mean_period_ms()``, so a fleet mixing models with different
+    request periods (e.g. :func:`repro.costs.model_mix_fleet`) sees each
+    device's own traffic rate while sharing the process's *shape*
+    (burstiness, jitter).  The zero-variance limit is preserved: a
+    deterministic process rescales to exactly each device's period, so the
+    ensemble still collapses onto :func:`repro.fleet.step.run_periodic`.
 
     Each chunk of seeds samples its gaps in one batched ``jax.random`` call
     (:meth:`~repro.core.arrivals.ArrivalProcess.sample_gaps`) and advances
@@ -346,6 +356,15 @@ def run_periodic_ensemble(
         raise ValueError(f"seed_chunk must be positive, got {seed_chunk}")
 
     n_dev = params.n_devices
+    period_scale = None
+    if scale_to_device_periods:
+        mean = process.mean_period_ms()
+        if not (mean > 0):
+            raise ValueError(
+                f"process {process.name!r} has non-positive mean period {mean}"
+            )
+        with enable_x64():
+            period_scale = params.period_ms / mean      # (N,)
     base_key = jax.random.PRNGKey(seed)
     parts: list[PeriodicEnsembleResult] = []
     done, chunk_idx = 0, 0
@@ -355,6 +374,8 @@ def run_periodic_ensemble(
         with enable_x64():
             gaps = process.sample_gaps(key, chunk * n_dev, n_steps)
             gaps = gaps.reshape(chunk, n_dev, n_steps).transpose(0, 2, 1)
+            if period_scale is not None:
+                gaps = gaps * period_scale[None, None, :]
         parts.append(
             periodic_ensemble(
                 params, gaps, jit=jit, keep_device_samples=keep_device_samples

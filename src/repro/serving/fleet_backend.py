@@ -75,6 +75,50 @@ class FleetTenantSpec:
         if self.replicas < 1:
             raise ValueError(f"tenant {self.name!r}: replicas must be ≥ 1")
 
+    @staticmethod
+    def from_model(
+        model: str,
+        policy: str = "auto",
+        replicas: int = 1,
+        mean_period_ms: float | None = None,
+        utilization: float = 0.25,
+        e_budget_mj: float = em.PAPER_ENERGY_BUDGET_MJ,
+        **cost_kwargs,
+    ) -> "FleetTenantSpec":
+        """A tenant priced by the cost zoo (`repro.costs`) instead of
+        hand-measured phases.
+
+        The model's roofline-calibrated request item is flattened into the
+        tenant's (config, infer) phase pair — data load/offload fold into
+        the inference leg, preserving total execution time and energy.
+        ``mean_period_ms`` defaults to the same utilization rule as
+        :func:`repro.costs.model_device_spec`.
+        """
+        from repro.costs import model_request_cost  # deferred: costs imports serving deps
+
+        cost = model_request_cost(model, **cost_kwargs)
+        item = cost.item
+        exec_ms = item.execution_time_ms
+        exec_mw = (item.execution_energy_mj / (exec_ms / 1e3)) if exec_ms > 0 else 0.0
+        if mean_period_ms is None:
+            if not (0.0 < utilization <= 1.0):
+                raise ValueError(f"utilization must be in (0, 1], got {utilization}")
+            mean_period_ms = max(exec_ms / utilization, item.total_time_ms)
+        config_s = item.config_time_ms / 1e3
+        config_mw = (item.config_energy_mj / config_s) if config_s > 0 else 0.0
+        return FleetTenantSpec(
+            name=item.name,
+            config_mw=config_mw,
+            config_s=config_s,
+            infer_mw=exec_mw,
+            infer_s=exec_ms / 1e3,
+            idle_mw=item.idle_power_mw,
+            policy=policy,
+            replicas=replicas,
+            mean_period_ms=mean_period_ms,
+            e_budget_mj=e_budget_mj,
+        )
+
     def device_spec(self) -> DeviceSpec:
         item = measured_workload_item(
             self.name, self.config_mw, self.config_s,

@@ -1,0 +1,285 @@
+"""Cost zoo (`repro.costs`) — the ISSUE-6 acceptance contract.
+
+* request energy/latency are monotone in batch size and sequence length;
+* a model DeviceSpec round-trips through ``FleetParams.from_specs``
+  bit-exactly (stacked arrays == the scalar closed forms);
+* in the zero-calibration limit (cost = the paper's Table-2 LSTM item) an
+  N=1 fleet agrees with the scalar ``simulate()`` oracle, and the golden
+  numbers — 499.06 ms crossover, 12.39× lifetime — survive unchanged;
+* a heterogeneous ≥3-model fleet runs end-to-end through ``run_periodic``
+  AND the MC ensemble with per-device roofline-derived request periods.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import energy_model as em
+from repro.core.phases import paper_lstm_item
+from repro.core.simulator import simulate
+from repro.core.workload import ExperimentSpec, WorkloadSpec, loads
+from repro.costs import (
+    EDGE_ACCEL,
+    PAPER_LSTM_MODEL,
+    TPU_V5E_LIKE,
+    AcceleratorProfile,
+    model_device_spec,
+    model_mix_fleet,
+    model_names,
+    model_request_cost,
+    request_counts,
+    roofline_time_ms,
+)
+from repro.configs import get_config, list_archs
+from repro.fleet import DeviceSpec, FleetParams, run_periodic
+
+CAL = em.CALIBRATED_POWERUP_OVERHEAD_MJ
+MIX = ["mixtral-8x7b", ("mamba2-370m", 2), "qwen3-1.7b"]
+
+
+# ---------------------------------------------------------------------------
+# Zoo basics
+# ---------------------------------------------------------------------------
+def test_zoo_covers_every_registered_arch():
+    names = model_names()
+    assert set(list_archs()) <= set(names)
+    assert PAPER_LSTM_MODEL in names
+    for name in names:
+        rc = model_request_cost(name)
+        assert rc.latency_ms > 0 and rc.energy_mj > 0
+        assert rc.crossover_ms > 0
+        assert rc.item.has_phase("configuration")
+
+
+def test_unknown_model_raises():
+    with pytest.raises(KeyError):
+        model_request_cost("not-a-model")
+
+
+def test_profile_by_name_and_adhoc_agree():
+    by_name = model_request_cost("qwen3-32b", profile="tpu-v5e-like")
+    by_obj = model_request_cost("qwen3-32b", profile=TPU_V5E_LIKE)
+    assert by_name.item == by_obj.item
+    adhoc = AcceleratorProfile(name="adhoc", peak_flops=TPU_V5E_LIKE.peak_flops,
+                               hbm_bw=TPU_V5E_LIKE.hbm_bw)
+    with pytest.raises(KeyError):
+        model_request_cost("qwen3-32b", profile="no-such-profile")
+    assert model_request_cost("qwen3-32b", profile=adhoc).profile == "adhoc"
+
+
+# ---------------------------------------------------------------------------
+# Monotonicity (satellite: property tests)
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(
+    model=st.sampled_from(sorted(list_archs())),
+    b=st.integers(min_value=1, max_value=32),
+)
+def test_energy_and_latency_monotone_in_batch(model, b):
+    lo = model_request_cost(model, batch=b)
+    hi = model_request_cost(model, batch=2 * b)
+    assert hi.energy_mj >= lo.energy_mj
+    assert hi.latency_ms >= lo.latency_ms
+    assert hi.counts.total.flops > lo.counts.total.flops
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    model=st.sampled_from(sorted(list_archs())),
+    prefill=st.integers(min_value=64, max_value=4096),
+)
+def test_energy_and_latency_monotone_in_seq_len(model, prefill):
+    lo = model_request_cost(model, prefill_len=prefill)
+    hi = model_request_cost(model, prefill_len=2 * prefill)
+    assert hi.energy_mj >= lo.energy_mj
+    assert hi.latency_ms >= lo.latency_ms
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    model=st.sampled_from(sorted(list_archs())),
+    decode=st.integers(min_value=1, max_value=512),
+)
+def test_energy_monotone_in_decode_len(model, decode):
+    lo = model_request_cost(model, decode_len=decode)
+    hi = model_request_cost(model, decode_len=2 * decode)
+    assert hi.energy_mj >= lo.energy_mj
+    assert hi.latency_ms >= lo.latency_ms
+
+
+def test_roofline_time_decreases_with_efficiency():
+    counts = request_counts(get_config("qwen3-1.7b")).total
+    t_half = roofline_time_ms(counts, EDGE_ACCEL, 0.5)
+    t_full = roofline_time_ms(counts, EDGE_ACCEL, 1.0)
+    assert t_half == pytest.approx(2.0 * t_full)
+    with pytest.raises(ValueError):
+        roofline_time_ms(counts, EDGE_ACCEL, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# DeviceSpec round-trip (satellite: bit-exact through from_specs)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("model", ["mixtral-8x7b", "mamba2-370m", PAPER_LSTM_MODEL])
+@pytest.mark.parametrize("strategy", ["on_off", "idle_waiting", "adaptive"])
+def test_device_spec_roundtrip_bit_exact(model, strategy):
+    spec = model_device_spec(model, strategy=strategy, e_budget_mj=1e9)
+    cols = spec.scalar_columns()
+    params = FleetParams.from_specs([spec])
+    for field, want in cols.items():
+        got = float(np.asarray(getattr(params, field))[0])
+        assert got == want, f"{model}/{strategy}: column {field} {got} != {want}"
+
+
+def test_from_model_classmethod_matches_function():
+    a = DeviceSpec.from_model("qwen3-1.7b", utilization=0.5)
+    b = model_device_spec("qwen3-1.7b", utilization=0.5)
+    assert a == b
+
+
+def test_default_period_is_feasible_for_both_strategies():
+    for model in ("mixtral-8x7b", "mamba2-370m", PAPER_LSTM_MODEL):
+        spec = model_device_spec(model)
+        assert spec.request_period_ms >= em.onoff_latency_ms(spec.item)
+        assert spec.request_period_ms >= em.idlewait_latency_ms(spec.item)
+
+
+# ---------------------------------------------------------------------------
+# Zero-calibration limit (satellite + goldens)
+# ---------------------------------------------------------------------------
+def test_paper_lstm_is_zero_calibration_limit():
+    rc = model_request_cost(PAPER_LSTM_MODEL)
+    assert rc.source == "measured"
+    assert rc.item == paper_lstm_item()
+
+
+def test_golden_numbers_survive_the_fusion():
+    item = model_request_cost(PAPER_LSTM_MODEL).item
+    crossover = em.crossover_period_ms(item, idle_power_mw=24.0,
+                                       powerup_overhead_mj=CAL)
+    assert round(crossover, 2) == 499.06
+    ratio = em.lifetime_ratio(item, 40.0, idle_power_mw=24.0,
+                              powerup_overhead_mj=CAL)
+    assert round(ratio, 2) == 12.41
+    assert abs(ratio - 12.39) / 12.39 < 0.005
+
+
+@pytest.mark.parametrize("strategy", ["on_off", "idle_waiting"])
+def test_n1_fleet_agrees_with_scalar_oracle(strategy):
+    """N=1 fleet with the zoo's paper-LSTM cost == scalar simulate()."""
+    period = 40.0
+    spec = model_device_spec(
+        PAPER_LSTM_MODEL, strategy=strategy, request_period_ms=period,
+        e_budget_mj=em.PAPER_ENERGY_BUDGET_MJ, powerup_overhead_mj=CAL,
+    )
+    oracle = simulate(ExperimentSpec(
+        workload=WorkloadSpec(em.PAPER_ENERGY_BUDGET_MJ / 1000.0, period),
+        item=paper_lstm_item(),
+        strategy_kind=strategy,
+        powerup_overhead_mj=CAL,
+    ))
+    fleet = run_periodic(FleetParams.from_specs([spec]),
+                         n_steps=oracle.n_items + 1)
+    assert int(fleet.n_items[0]) == oracle.n_items
+    assert float(fleet.energy_mj[0]) == oracle.energy_used_mj
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous fleet end-to-end (acceptance criterion)
+# ---------------------------------------------------------------------------
+def test_model_mix_fleet_layout_and_periods():
+    params = model_mix_fleet(MIX, e_budget_mj=1e9)
+    assert params.n_devices == 4            # 1 + 2 + 1
+    periods = np.asarray(params.period_ms)
+    assert periods[1] == periods[2]          # the two mamba2 replicas
+    assert len({round(p, 6) for p in periods}) == 3   # three distinct models
+    tiled = model_mix_fleet(MIX, n_devices=10, e_budget_mj=1e9)
+    assert tiled.n_devices == 10
+    assert np.asarray(tiled.period_ms)[4] == periods[0]   # cyclic tiling
+
+
+def test_heterogeneous_fleet_through_run_periodic():
+    params = model_mix_fleet(MIX, n_devices=8, e_budget_mj=50_000_000.0)
+    res = run_periodic(params, n_steps=50)
+    items = np.asarray(res.n_items)
+    energy = np.asarray(res.energy_mj)
+    assert items.shape == (8,) and (items > 0).all()
+    assert (energy > 0).all() and (energy <= 50_000_000.0 + 1.0).all()
+    # big-model devices exhaust the budget sooner than the edge nodes
+    assert items[0] < items[1]
+
+
+def test_heterogeneous_fleet_through_mc_ensemble():
+    from repro.core.arrivals import DeterministicArrivals, JitteredArrivals
+    from repro.mc import run_periodic_ensemble
+
+    params = model_mix_fleet(MIX, n_devices=8, e_budget_mj=50_000_000.0)
+    mean = float(np.asarray(params.period_ms).mean())
+
+    # zero-variance limit: per-device rescaled gaps == run_periodic exactly
+    det = run_periodic_ensemble(
+        params, DeterministicArrivals(mean), n_steps=50, n_seeds=3,
+        scale_to_device_periods=True,
+    )
+    base = run_periodic(params, 50)
+    np.testing.assert_array_equal(det.device_items.mean,
+                                  np.asarray(base.n_items, dtype=float))
+
+    # jittered heterogeneous ensemble runs and stays near the exact counts
+    jit = run_periodic_ensemble(
+        params, JitteredArrivals(mean, 0.1), n_steps=50, n_seeds=16,
+        scale_to_device_periods=True,
+    )
+    assert jit.n_seeds == 16
+    assert np.all(jit.device_items.mean > 0)
+    rel = np.abs(jit.device_items.mean - np.asarray(base.n_items)) / np.asarray(
+        base.n_items
+    )
+    assert float(rel.max()) < 0.25
+
+
+def test_scale_to_device_periods_rejects_meanless_process():
+    from repro.core.arrivals import DeterministicArrivals
+    from repro.mc import run_periodic_ensemble
+
+    class Meanless(DeterministicArrivals):
+        def mean_period_ms(self):
+            return 0.0
+
+    params = model_mix_fleet(MIX, e_budget_mj=1e9)
+    with pytest.raises(ValueError):
+        run_periodic_ensemble(params, Meanless(period_ms=40.0), 10, 2,
+                              scale_to_device_periods=True)
+
+
+# ---------------------------------------------------------------------------
+# Integration points: YAML items, serving tenants
+# ---------------------------------------------------------------------------
+def test_yaml_model_item():
+    spec = loads(
+        """
+        workload: {energy_budget_j: 4147, request_period_ms: 60000}
+        item: {model: mixtral-8x7b, batch: 4}
+        strategy: {kind: idle_waiting}
+        """
+    )
+    assert spec.item == model_request_cost("mixtral-8x7b", batch=4).item
+    with pytest.raises(ValueError):
+        loads(
+            """
+            workload: {energy_budget_j: 1, request_period_ms: 1}
+            item:
+              model: mixtral-8x7b
+              phases: [{name: inference, power_mw: 1.0, time_ms: 1.0}]
+            """
+        )
+
+
+def test_fleet_tenant_from_model_conserves_energy():
+    from repro.serving.fleet_backend import FleetTenantSpec
+
+    t = FleetTenantSpec.from_model("mixtral-8x7b", replicas=2, e_budget_mj=1e9)
+    rc = model_request_cost("mixtral-8x7b")
+    assert t.infer_mw * t.infer_s == pytest.approx(rc.item.execution_energy_mj)
+    assert t.config_mw * t.config_s == pytest.approx(rc.item.config_energy_mj)
+    assert t.idle_mw == rc.item.idle_power_mw
+    assert t.replicas == 2

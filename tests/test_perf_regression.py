@@ -1,0 +1,123 @@
+"""Perf-regression harness: fast logic tests + slow measured assertions.
+
+Tier-1 covers the threshold math, BENCH-JSON parsing, and failure
+detection on synthetic payloads (no timing).  The ``slow``-marked tests
+actually measure the three headline throughputs — periodic-fleet
+devices/sec, MC seeds/sec, cost-table points/sec — against the pinned
+machine-scaled references (CI's benchmarks job runs them).
+"""
+import pytest
+
+from repro.testing import perf_regression as pr
+
+
+# ---------------------------------------------------------------------------
+# Threshold math (fast)
+# ---------------------------------------------------------------------------
+def test_floor_scales_with_machine():
+    ref = pr.PerfReference("x", 1000.0, floor_frac=0.2)
+    assert ref.floor(1.0) == 200.0
+    assert ref.floor(0.25) == 50.0      # 4x slower machine → 4x lower floor
+
+
+def test_machine_scale_clips_at_one():
+    assert pr.machine_scale(scan_rate=pr.REFERENCE_SCAN_RATE * 10) == 1.0
+    assert pr.machine_scale(scan_rate=pr.REFERENCE_SCAN_RATE / 2) == pytest.approx(0.5)
+
+
+def test_check_pass_and_fail():
+    name = "periodic_fleet"
+    ref = pr.REFERENCES[name]
+    ok = pr.check(name, ref.reference_per_s, scale=1.0)
+    assert ok["ok"] and ok["floor_per_s"] < ok["measured_per_s"]
+    bad = pr.check(name, ref.floor(1.0) * 0.5, scale=1.0)
+    assert not bad["ok"]
+    # exactly at the floor passes (>=)
+    assert pr.check(name, ref.floor(1.0), scale=1.0)["ok"]
+
+
+def test_every_reference_is_positive_and_fractional():
+    for ref in pr.REFERENCES.values():
+        assert ref.reference_per_s > 0
+        assert 0.0 < ref.floor_frac < 1.0
+
+
+# ---------------------------------------------------------------------------
+# BENCH-JSON parsing on synthetic payloads (fast)
+# ---------------------------------------------------------------------------
+def _fleet_payload(devices_per_s):
+    return {"kind": "fleet", "throughput": {"periodic": {"fleet": {
+        "devices_per_s": devices_per_s}}}}
+
+
+def test_check_bench_json_fleet_pass_and_fail():
+    good = pr.check_bench_json(_fleet_payload(1e9), scale=1.0)
+    assert [r["ok"] for r in good] == [True]
+    bad = pr.check_bench_json(_fleet_payload(1.0), scale=1.0)
+    assert [r["ok"] for r in bad] == [False]
+
+
+def test_check_bench_json_mc_and_costs_fields():
+    mc = {"kind": "mc", "throughput": {"ensemble": {"seeds_per_s": 1e9}}}
+    assert pr.check_bench_json(mc, scale=1.0)[0]["ok"]
+    costs = {"kind": "costs", "costs": {"throughput": {"pts_per_s": 1e9}}}
+    assert pr.check_bench_json(costs, scale=1.0)[0]["ok"]
+
+
+def test_missing_throughput_field_fails_explicitly():
+    recs = pr.check_bench_json({"kind": "fleet"}, scale=1.0)
+    assert len(recs) == 1
+    assert not recs[0]["ok"]
+    assert "missing field" in recs[0]["error"]
+
+
+def test_unknown_kind_raises():
+    with pytest.raises(ValueError):
+        pr.check_bench_json({"kind": "mystery"}, scale=1.0)
+
+
+def test_check_bench_json_reads_files(tmp_path):
+    import json
+
+    p = tmp_path / "BENCH_fleet.json"
+    p.write_text(json.dumps(_fleet_payload(1e9)))
+    assert pr.check_bench_json(str(p), scale=1.0)[0]["ok"]
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    import json
+
+    good = tmp_path / "good.json"
+    good.write_text(json.dumps(_fleet_payload(1e9)))
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps(_fleet_payload(1.0)))
+    assert pr.main([str(good)]) == 0
+    assert pr.main([str(bad)]) == 1
+    out = capsys.readouterr().out
+    assert "FAIL" in out
+
+
+# ---------------------------------------------------------------------------
+# Measured checks (slow; CI benchmarks job)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def scale():
+    return pr.machine_scale()
+
+
+@pytest.mark.slow
+def test_periodic_fleet_throughput(scale):
+    rec = pr.check("periodic_fleet", pr.measure_periodic_fleet(), scale)
+    assert rec["ok"], rec
+
+
+@pytest.mark.slow
+def test_mc_seeds_throughput(scale):
+    rec = pr.check("mc_seeds", pr.measure_mc_seeds(), scale)
+    assert rec["ok"], rec
+
+
+@pytest.mark.slow
+def test_batch_sweep_throughput(scale):
+    rec = pr.check("batch_sweep", pr.measure_batch_sweep(), scale)
+    assert rec["ok"], rec
