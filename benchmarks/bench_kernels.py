@@ -28,7 +28,10 @@ KERNEL_SHAPES: dict[str, dict[str, int]] = {
 
 
 def _time(f, *args, reps=5) -> float:
-    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else jax.block_until_ready(f(*args))
+    # Warm up exactly once: a second compile-path call here would double the
+    # kernel's side work and skew the calibration wall-clocks downstream.
+    warmup = f(*args)
+    jax.block_until_ready(warmup)
     t0 = time.perf_counter()
     for _ in range(reps):
         out = f(*args)

@@ -76,6 +76,10 @@ def controller_timeout_s(
     to the serving layer's seconds convention (``None`` = never release)."""
     controller.set_item(item)
     t_ms = controller.idle_timeout_ms()
+    if math.isnan(t_ms):
+        # A NaN timeout would silently behave as never-release inside the
+        # simulator (``min(gap, nan) == gap``); fail safe to release-now.
+        return 0.0
     return None if math.isinf(t_ms) else t_ms / 1000.0
 
 
@@ -103,7 +107,14 @@ def break_even_timeout_ms(
     if idle_power_mw <= 0:
         return math.inf
     saved = em.onoff_item_energy_mj(item, powerup_overhead_mj) - em.idlewait_item_energy_mj(item)
-    return max(saved, 0.0) * 1000.0 / idle_power_mw
+    # When a release saves nothing (cheap-config items, over-subtracted
+    # power-up calibration, or NaN energies) the correct limit is "release
+    # immediately".  ``not (saved > 0)`` — rather than ``max(saved, 0.0)`` —
+    # also catches NaN, which would otherwise flow through
+    # ``controller_timeout_s`` into the simulator as a never-release timeout.
+    if not saved > 0.0:
+        return 0.0
+    return saved * 1000.0 / idle_power_mw
 
 
 @dataclasses.dataclass(frozen=True)

@@ -13,6 +13,11 @@ and the live serving layer (:mod:`repro.serving.scheduler`) consume:
 * :class:`MMPPArrivals`          — 2-state Markov-modulated Poisson process:
   bursts of fast requests separated by long quiet stretches (event-triggered
   sensors, diurnal tenants);
+* :class:`DiurnalArrivals`       — MMPP with diurnal rate modulation: a
+  sinusoidal day-cycle carrier rate, optionally interrupted by geometric
+  bursts (regime-switching tenants; the learned-policy training workload);
+* :class:`FlashCrowdArrivals`    — quiet Poisson baseline punctuated by
+  fixed-length flash crowds (thundering herds);
 * :class:`TraceArrivals`         — replay of a recorded trace (one
   inter-arrival gap in ms per line; ``#`` comments allowed).
 
@@ -305,6 +310,192 @@ class MMPPArrivals(ArrivalProcess):
 
 
 @dataclasses.dataclass(frozen=True)
+class DiurnalArrivals(ArrivalProcess):
+    """MMPP with diurnal rate modulation (regime-switching tenant traffic).
+
+    The quiet state is a Poisson stream whose rate follows a day cycle:
+    ``λ(t) = (1 + amplitude · sin(2π·(t/day_ms + phase_frac))) / mean_ms``,
+    sampled per-gap with the rate frozen at the arrival time (exact in the
+    ``day_ms ≫ gap`` regime this models).  When ``burst_ms`` is set, a
+    2-state chain identical to :class:`MMPPArrivals` is layered on top:
+    bursts of fast requests (mean gap ``burst_ms``, geometric dwell
+    ``mean_burst_len``) interrupt the diurnal carrier — the flash-sale-on-
+    top-of-a-day-cycle workload.  ``amplitude=0`` with no burst state is
+    *exactly* :class:`PoissonArrivals` (the stationary limit the
+    conformance suite pins).
+    """
+
+    mean_ms: float
+    day_ms: float
+    amplitude: float = 0.5
+    phase_frac: float = 0.0
+    burst_ms: float | None = None
+    mean_burst_len: float = 8.0
+    mean_quiet_len: float = 8.0
+    name: str = "diurnal"
+
+    def __post_init__(self):
+        _require_positive_rate("DiurnalArrivals", self.mean_ms, "mean period")
+        _require_positive_rate("DiurnalArrivals", self.day_ms, "day length")
+        # amplitude ≥ 1 makes the instantaneous rate non-positive at the
+        # trough (gap mean → ∞ or negative); NaN fails both comparisons.
+        if not (0.0 <= self.amplitude < 1.0):
+            raise ValueError(
+                f"DiurnalArrivals: amplitude must be in [0, 1), got {self.amplitude!r}"
+            )
+        if not (math.isfinite(self.phase_frac)):
+            raise ValueError(
+                f"DiurnalArrivals: phase_frac must be finite, got {self.phase_frac!r}"
+            )
+        if self.burst_ms is not None:
+            _require_positive_rate("DiurnalArrivals", self.burst_ms, "burst mean period")
+            for nm, dwell in (("mean_burst_len", self.mean_burst_len),
+                              ("mean_quiet_len", self.mean_quiet_len)):
+                if not (math.isfinite(dwell) and dwell >= 1):
+                    raise ValueError(
+                        f"DiurnalArrivals: {nm} must be a finite dwell of ≥ 1 "
+                        f"arrival, got {dwell!r}"
+                    )
+
+    def _quiet_mean(self, t_ms: float) -> float:
+        phase = 2.0 * math.pi * (t_ms / self.day_ms + self.phase_frac)
+        return self.mean_ms / (1.0 + self.amplitude * math.sin(phase))
+
+    def inter_arrival_times(self, n: int, seed: int = 0) -> np.ndarray:
+        rng = np.random.default_rng(seed)
+        gaps = np.empty((n,), dtype=np.float64)
+        t = 0.0
+        in_burst = False
+        has_bursts = self.burst_ms is not None
+        for i in range(n):
+            mean = self.burst_ms if in_burst else self._quiet_mean(t)
+            gaps[i] = rng.exponential(mean)
+            t += gaps[i]
+            if has_bursts:
+                p_flip = 1.0 / (
+                    self.mean_burst_len if in_burst else self.mean_quiet_len
+                )
+                if rng.random() < p_flip:
+                    in_burst = not in_burst
+        return gaps
+
+    def mean_period_ms(self) -> float:
+        # The modulation integrates to zero over a day, so arrivals/day is
+        # day_ms/mean_ms and the long-run mean gap of the carrier is mean_ms;
+        # with bursts, weight states by dwell length as in MMPPArrivals.
+        if self.burst_ms is None:
+            return self.mean_ms
+        b, q = self.mean_burst_len, self.mean_quiet_len
+        return (b * self.burst_ms + q * self.mean_ms) / (b + q)
+
+    def _batch_gaps(self, key, n_devices: int, n_gaps: int) -> jnp.ndarray:
+        # One lax.scan over the gap index, carrying (cumulative time, burst
+        # state) per device — the diurnal phase is a function of the carried
+        # clock, so rows advance through their own day cycles independently.
+        k_exp, k_flip = jax.random.split(key)
+        u_exp = jax.random.exponential(k_exp, (n_gaps, n_devices), dtype=jnp.float64)
+        u_flip = jax.random.uniform(k_flip, (n_gaps, n_devices), dtype=jnp.float64)
+        has_bursts = self.burst_ms is not None
+        p_b = 1.0 / self.mean_burst_len if has_bursts else 0.0
+        p_q = 1.0 / self.mean_quiet_len if has_bursts else 0.0
+        burst_ms = self.burst_ms if has_bursts else self.mean_ms
+        two_pi = 2.0 * math.pi
+
+        def step(carry, u):
+            t, in_burst = carry
+            ue, uf = u
+            phase = two_pi * (t / self.day_ms + self.phase_frac)
+            quiet_mean = self.mean_ms / (1.0 + self.amplitude * jnp.sin(phase))
+            gap = ue * jnp.where(in_burst, burst_ms, quiet_mean)
+            flip = uf < jnp.where(in_burst, p_b, p_q)
+            return (t + gap, in_burst ^ flip), gap
+
+        t0 = jnp.zeros((n_devices,), dtype=jnp.float64)
+        in_burst0 = jnp.zeros((n_devices,), dtype=bool)
+        _, gaps = jax.lax.scan(step, (t0, in_burst0), (u_exp, u_flip))
+        return gaps.T
+
+
+@dataclasses.dataclass(frozen=True)
+class FlashCrowdArrivals(ArrivalProcess):
+    """Quiet Poisson baseline punctuated by fixed-length flash crowds.
+
+    Quiet-state gaps are exponential with mean ``quiet_ms``; after each
+    quiet arrival a flash starts with probability ``1/flash_every``, during
+    which exactly ``flash_len`` gaps are exponential with mean
+    ``flash_gap_ms`` before the stream drops back to quiet.  Unlike
+    :class:`MMPPArrivals` (geometric dwells), the flash length is
+    *deterministic* — the thundering-herd / cache-stampede shape where a
+    learned policy can count the crowd out instead of hedging every gap.
+    """
+
+    quiet_ms: float
+    flash_gap_ms: float
+    flash_len: int = 32
+    flash_every: float = 4.0
+    name: str = "flash_crowd"
+
+    def __post_init__(self):
+        _require_positive_rate("FlashCrowdArrivals", self.quiet_ms, "quiet mean period")
+        _require_positive_rate("FlashCrowdArrivals", self.flash_gap_ms, "flash mean gap")
+        if not (isinstance(self.flash_len, int) and self.flash_len >= 1):
+            raise ValueError(
+                f"FlashCrowdArrivals: flash_len must be an int ≥ 1, got {self.flash_len!r}"
+            )
+        if not (math.isfinite(self.flash_every) and self.flash_every >= 1):
+            raise ValueError(
+                f"FlashCrowdArrivals: flash_every must be a finite number ≥ 1 "
+                f"of quiet arrivals per flash trigger, got {self.flash_every!r}"
+            )
+
+    def inter_arrival_times(self, n: int, seed: int = 0) -> np.ndarray:
+        rng = np.random.default_rng(seed)
+        gaps = np.empty((n,), dtype=np.float64)
+        remaining = 0
+        p_trigger = 1.0 / self.flash_every
+        for i in range(n):
+            if remaining > 0:
+                gaps[i] = rng.exponential(self.flash_gap_ms)
+                remaining -= 1
+            else:
+                gaps[i] = rng.exponential(self.quiet_ms)
+                if rng.random() < p_trigger:
+                    remaining = self.flash_len
+        return gaps
+
+    def mean_period_ms(self) -> float:
+        # Per cycle: geometric(1/flash_every) quiet gaps (mean flash_every)
+        # followed by exactly flash_len flash gaps — exact stationary mean.
+        return (
+            self.flash_every * self.quiet_ms + self.flash_len * self.flash_gap_ms
+        ) / (self.flash_every + self.flash_len)
+
+    def _batch_gaps(self, key, n_devices: int, n_gaps: int) -> jnp.ndarray:
+        # lax.scan over the gap index carrying the per-device countdown of
+        # remaining flash arrivals (0 = quiet state).
+        k_exp, k_trig = jax.random.split(key)
+        u_exp = jax.random.exponential(k_exp, (n_gaps, n_devices), dtype=jnp.float64)
+        u_trig = jax.random.uniform(k_trig, (n_gaps, n_devices), dtype=jnp.float64)
+        p_trigger = 1.0 / self.flash_every
+
+        def step(remaining, u):
+            ue, ut = u
+            in_flash = remaining > 0
+            gap = ue * jnp.where(in_flash, self.flash_gap_ms, self.quiet_ms)
+            triggered = (~in_flash) & (ut < p_trigger)
+            remaining = jnp.where(
+                in_flash,
+                remaining - 1,
+                jnp.where(triggered, self.flash_len, 0),
+            )
+            return remaining, gap
+
+        remaining0 = jnp.zeros((n_devices,), dtype=jnp.int32)
+        _, gaps = jax.lax.scan(step, remaining0, (u_exp, u_trig))
+        return gaps.T
+
+
+@dataclasses.dataclass(frozen=True)
 class TraceArrivals(ArrivalProcess):
     """Replay of a recorded gap trace; cycles if more gaps are requested
     than recorded."""
@@ -415,6 +606,8 @@ def make_process(kind: str, **kwargs) -> ArrivalProcess:
         "poisson": PoissonArrivals,
         "mmpp": MMPPArrivals,
         "bursty": MMPPArrivals,
+        "diurnal": DiurnalArrivals,
+        "flash_crowd": FlashCrowdArrivals,
         "trace": TraceArrivals,
     }
     if kind not in kinds:

@@ -31,6 +31,13 @@ Strategies:
                   static strategy while irregular ones keep the ski-rental
                   bound.
 
+``policy=`` accepts *any* object speaking the PolicyController duck-typed
+protocol (``set_item`` / ``observe_gap`` / ``idle_timeout_ms`` /
+``idle_power_mw`` / ``summary``), not just
+:class:`~repro.core.adaptive.PolicyController` itself — in particular
+:class:`repro.policy.LearnedTimeoutPolicy` drops in unchanged to serve
+trained timeouts behind the same ``strategy="adaptive"`` plumbing.
+
 The controller records wall-clock per phase and converts to energy via a
 pluggable power model, so the simulator's predictions are checkable against
 the runnable system (examples/duty_cycle_serving.py).

@@ -75,6 +75,20 @@ class ConfidenceInterval:
     def covers(self, x: float) -> bool:
         return self.lo <= x <= self.hi
 
+    def separated_from(self, other: "ConfidenceInterval") -> bool:
+        """True when the two bands do not overlap (strictly disjoint).
+
+        The non-overlap criterion the policy benchmark uses to declare a
+        win: conservative relative to a two-sample test at the same
+        confidence, so a ``True`` here is the stronger statement.
+
+        >>> a = normal_interval([1.0, 1.1, 0.9, 1.0])
+        >>> b = normal_interval([2.0, 2.1, 1.9, 2.0])
+        >>> a.separated_from(b), a.separated_from(a)
+        (True, False)
+        """
+        return self.hi < other.lo or other.hi < self.lo
+
     def to_dict(self) -> dict:
         return {
             "mean": self.mean,

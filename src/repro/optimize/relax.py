@@ -66,12 +66,36 @@ __all__ = [
     "config_energy_loss",
     "config_scalarized_loss",
     "lifetime_loss",
+    "sigmoid_gate",
+    "smooth_min",
 ]
 
 #: Sharpness (ms) of the sigmoid feasibility/crossover gates.  Small enough
 #: that the gates are near-hard at grid resolution, large enough that useful
 #: gradients survive a few ms away from the boundary.
 DEFAULT_GATE_MS = 1.0
+
+
+def sigmoid_gate(margin_ms, gate_ms=DEFAULT_GATE_MS):
+    """Smooth indicator ``1[margin_ms > 0]`` with sharpness ``gate_ms``.
+
+    The single gate every relaxation here uses (feasibility, crossover pick,
+    and the policy trainer's release decision): exactly 0.5 at the boundary,
+    within 1e-9 of hard past ``±21·gate_ms``, and monotone in the margin.
+    """
+    return jax.nn.sigmoid(margin_ms / gate_ms)
+
+
+def smooth_min(a, b, gate_ms=DEFAULT_GATE_MS):
+    """Differentiable ``min(a, b)`` with the same sharpness convention.
+
+    ``a + softplus``-free form: ``min(a,b) = a·σ((b−a)/s) + b·σ((a−b)/s)``
+    up to an ``O(gate_ms)`` smoothing term near the kink; exact far from it.
+    Used by the learned-policy trainer for the idle-time term
+    ``min(gap, timeout)`` of the per-gap energy.
+    """
+    w = jax.nn.sigmoid((b - a) / gate_ms)
+    return a * w + b * (1.0 - w)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -270,7 +294,7 @@ def _counts_core(lv: dict, f, w_probs, c_prob, n_w: int) -> dict[str, jnp.ndarra
     t_req = lv["t_req_ms"]
     budget = lv["budget_mj"]
     p_idle = lv["p_idle_mw"]
-    gate = lambda margin_ms: jax.nn.sigmoid(margin_ms / lv["gate_ms"])  # noqa: E731
+    gate = lambda margin_ms: sigmoid_gate(margin_ms, lv["gate_ms"])  # noqa: E731
 
     e_onoff = e_cfg + lv["e_exec_mj"] + lv["powerup_mj"]
     t_onoff = t_cfg + lv["t_exec_ms"]

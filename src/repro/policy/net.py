@@ -1,0 +1,92 @@
+"""The timeout policy network: a small tanh MLP over the online features.
+
+Layer layout follows :mod:`repro.models.mlp` (params as a pytree of weight
+dicts applied by a pure function) at serving-appropriate scale: 6 features
+-> a couple of tanh hidden layers -> one linear output, read as a
+*log-multiplier* of the ski-rental break-even timeout:
+
+    timeout_ms = T*_be · exp(clip(raw, ±LOG_SPAN))
+
+The final layer is zero-initialised, so an untrained network IS the
+ski-rental hybrid (timeout exactly T*_be everywhere) — training starts from
+the 2-competitive baseline and can only be pulled away from it by gradient
+evidence.  A numpy twin of the forward pass serves the per-request hot path
+without JAX dispatch.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.policy.features import N_FEATURES
+
+#: Output clip (natural-log units): timeouts live in
+#: T*_be · [e^-LOG_SPAN, e^+LOG_SPAN] ≈ [T*_be/3000, 3000·T*_be], wide
+#: enough to express both statics after eval-time snapping.
+LOG_SPAN = 8.0
+
+
+def init_mlp(key, hidden=(24, 24), in_dim: int = N_FEATURES) -> list:
+    """Parameter pytree: ``[{"w": (a,b), "b": (b,)}, ...]`` in float64.
+
+    Hidden layers get 1/sqrt(fan_in) normal init; the output layer is
+    all-zero so ``apply_mlp == 0`` at init (see module docstring).
+    """
+    sizes = (in_dim, *hidden, 1)
+    params = []
+    keys = jax.random.split(key, len(sizes) - 1)
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        last = i == len(sizes) - 2
+        w = (
+            jnp.zeros((a, b), dtype=jnp.float64)
+            if last
+            else jax.random.normal(keys[i], (a, b), dtype=jnp.float64)
+            / jnp.sqrt(float(a))
+        )
+        params.append({"w": w, "b": jnp.zeros((b,), dtype=jnp.float64)})
+    return params
+
+
+def apply_mlp(params, x):
+    """Raw scalar output (log timeout multiplier) for features ``x``."""
+    h = x
+    for layer in params[:-1]:
+        h = jnp.tanh(h @ layer["w"] + layer["b"])
+    out = h @ params[-1]["w"] + params[-1]["b"]
+    return jnp.squeeze(out, axis=-1)
+
+
+def timeout_from_raw(raw, t_be_ms):
+    """Decode the network output into a timeout (ms)."""
+    return t_be_ms * jnp.exp(jnp.clip(raw, -LOG_SPAN, LOG_SPAN))
+
+
+def timeout_ms(params, features, t_be_ms):
+    """features -> timeout (ms); the composition the rollout kernel scans."""
+    return timeout_from_raw(apply_mlp(params, features), t_be_ms)
+
+
+# ---- numpy twin (serving hot path) ------------------------------------------
+
+def params_to_numpy(params) -> list:
+    """Materialise the pytree as float64 numpy arrays for the wrapper."""
+    return [
+        {"w": np.asarray(layer["w"], dtype=np.float64),
+         "b": np.asarray(layer["b"], dtype=np.float64)}
+        for layer in params
+    ]
+
+
+def apply_mlp_np(np_params, x) -> float:
+    """Numpy forward pass; matches :func:`apply_mlp` to float64 rounding."""
+    h = np.asarray(x, dtype=np.float64)
+    for layer in np_params[:-1]:
+        h = np.tanh(h @ layer["w"] + layer["b"])
+    out = h @ np_params[-1]["w"] + np_params[-1]["b"]
+    return float(out[0])
+
+
+def timeout_ms_np(np_params, features, t_be_ms: float) -> float:
+    raw = apply_mlp_np(np_params, features)
+    return t_be_ms * float(np.exp(np.clip(raw, -LOG_SPAN, LOG_SPAN)))

@@ -23,6 +23,11 @@ ski-rental policy to N tenants under a shared HBM budget:
                     traffic shapes each converge to their own best policy
                     on the same slice.
 
+``Tenant.controller`` accepts any object speaking the PolicyController
+duck-typed protocol, so ``Tenant(policy="adaptive", controller=...)`` with
+a :class:`repro.policy.LearnedTimeoutPolicy` swaps the analytical regime
+rule for a trained timeout network per tenant — no scheduler changes.
+
 Energy accounting mirrors core.duty_cycle: per-phase wall time × power.
 """
 from __future__ import annotations

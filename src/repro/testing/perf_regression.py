@@ -78,6 +78,12 @@ REFERENCES: dict[str, PerfReference] = {
         PerfReference("bench_mc_seeds_per_s", 25_000.0, floor_frac=0.1,
                       unit="seeds/s"),
         PerfReference("bench_costs_pts_per_s", 1_000.0, unit="pts/s"),
+        # policy rollout: the jitted vmapped trace-simulator scan; the smoke
+        # configuration (64 streams x 256 gaps) already clears 1M steps/s on
+        # the reference box, so 0.1 of the pinned rate flags a lost jit or a
+        # per-gap Python fallback without tripping on batch-size jitter
+        PerfReference("bench_policy_steps_per_s", 1_200_000.0, floor_frac=0.1,
+                      unit="steps/s"),
     )
 }
 
@@ -210,6 +216,9 @@ _BENCH_FIELDS: dict[str, list[tuple[str, tuple[str, ...]]]] = {
     ],
     "costs": [
         ("bench_costs_pts_per_s", ("costs", "throughput", "pts_per_s")),
+    ],
+    "policy": [
+        ("bench_policy_steps_per_s", ("throughput", "rollout", "steps_per_s")),
     ],
 }
 

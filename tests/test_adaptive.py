@@ -372,3 +372,114 @@ class TestAdaptiveOnTraces:
         n_adaptive = self.adaptive(item, arrivals)
         assert n_adaptive > n["on_off"]
         assert n_adaptive > n["idle_waiting"]
+
+
+# ---------------------------------------------------------------------------
+# regression: break-even edge cases (non-positive / NaN savings)
+# ---------------------------------------------------------------------------
+class TestBreakEvenEdgeCases:
+    """A release that saves nothing must mean 'release immediately' (0.0),
+    never a negative timeout — and NaN inputs must not leak a NaN timeout
+    into the simulator, where ``min(gap, nan) == gap`` silently turns it
+    into never-release."""
+
+    def test_negative_savings_clamp_to_zero(self, item):
+        # over-subtracted power-up calibration: On-Off looks cheaper than
+        # Idle-Waiting per item, so saved < 0
+        t = break_even_timeout_ms(item, 24.0, powerup_overhead_mj=-30.0)
+        assert t == 0.0
+
+    def test_nan_powerup_yields_zero_not_nan(self, item):
+        t = break_even_timeout_ms(item, 24.0, powerup_overhead_mj=math.nan)
+        assert t == 0.0 and not math.isnan(t)
+
+    def test_nonpositive_idle_power_is_never_release(self, item):
+        assert break_even_timeout_ms(item, 0.0) == math.inf
+        assert break_even_timeout_ms(item, -5.0) == math.inf
+
+    def test_controller_timeout_s_never_nan(self, item):
+        from repro.core.adaptive import controller_timeout_s
+
+        class NanPolicy:
+            def set_item(self, item):
+                pass
+
+            def idle_timeout_ms(self):
+                return math.nan
+
+        # fail-safe is release-now, not never-release
+        assert controller_timeout_s(NanPolicy(), item) == 0.0
+
+    def test_policy_controller_finite_on_degenerate_item(self, item):
+        """The hybrid arm of a warm controller with negative savings emits
+        the clamped 0.0 timeout (On-Off limit), not a negative duration."""
+        pc = PolicyController(item=item, method=M12, powerup_overhead_mj=-30.0)
+        for _ in range(5):
+            pc.observe_gap(40.0)
+        t = pc.break_even_ms()
+        assert t == 0.0
+        assert pc.idle_timeout_ms() >= 0.0
+
+    def test_simulator_survives_degenerate_policy(self, item):
+        """End-to-end: the clamped timeout drives the trace simulator to the
+        On-Off accounting instead of corrupting the idle ledger."""
+        from repro.core.adaptive import FixedTimeoutPolicy
+
+        arrivals = DeterministicArrivals(100.0).arrival_times(2_000)
+        clamped = FixedTimeoutPolicy(
+            timeout_ms=break_even_timeout_ms(item, 24.0, -30.0),
+            idle_power_mw=24.0,
+        )
+        res = simulate_trace(item, arrivals, clamped, 500.0, -30.0)
+        oo = simulate_trace(
+            item, arrivals,
+            StaticPolicy("on_off", item, method=M12, powerup_overhead_mj=-30.0),
+            500.0, -30.0,
+        )
+        assert res.n_items == oo.n_items
+        assert res.energy_used_mj == pytest.approx(oo.energy_used_mj, rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# regression: hysteresis must not flap around the crossover
+# ---------------------------------------------------------------------------
+class TestHysteresisNoFlap:
+    """Gaps oscillating ±ε around T_cross (ε inside the 10% band) must
+    produce at most ONE regime switch — the initial lock-in — for both the
+    analytical decide() and the online controller."""
+
+    @pytest.mark.parametrize("eps", [0.02, 0.08])
+    def test_decide_holds_previous_inside_band(self, item, eps):
+        strat = AdaptiveStrategy(item=item, method=M12, powerup_overhead_mj=OVERHEAD)
+        cross = strat.crossover_ms()
+        prev = strat.decide(cross * (1.0 - eps))
+        switches = 0
+        for i in range(200):
+            period = cross * (1.0 + (eps if i % 2 == 0 else -eps))
+            cur = strat.decide(period, previous=prev)
+            switches += cur != prev
+            prev = cur
+        assert switches == 0
+
+    @pytest.mark.parametrize("eps", [0.02, 0.08])
+    def test_online_controller_at_most_one_switch(self, item, eps):
+        pc = PolicyController(item=item, method=M12, powerup_overhead_mj=OVERHEAD)
+        cross = pc.crossover_ms()
+        for i in range(400):
+            pc.observe_gap(cross * (1.0 + (eps if i % 2 == 0 else -eps)))
+            pc.idle_timeout_ms()            # serving loop queries every gap
+        assert pc.summary()["regime_switches"] <= 1
+        assert pc.summary()["regime"] in ("idle_waiting", "on_off")
+
+    @pytest.mark.parametrize("eps", [0.02, 0.08])
+    def test_learned_policy_guard_at_most_one_switch(self, item, eps):
+        from repro.policy import LearnedTimeoutPolicy, untrained_policy
+
+        trained = untrained_policy(item, method=M12, powerup_overhead_mj=OVERHEAD)
+        pol = LearnedTimeoutPolicy(trained, item=item)
+        cross = pol.crossover_ms()
+        for i in range(400):
+            pol.observe_gap(cross * (1.0 + (eps if i % 2 == 0 else -eps)))
+            pol.idle_timeout_ms()
+        assert pol.summary()["regime_switches"] <= 1
+        assert pol.summary()["guard_engaged"]

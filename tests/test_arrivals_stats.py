@@ -20,6 +20,8 @@ import jax
 
 from repro.core.arrivals import (
     DeterministicArrivals,
+    DiurnalArrivals,
+    FlashCrowdArrivals,
     JitteredArrivals,
     MMPPArrivals,
     PoissonArrivals,
@@ -160,3 +162,120 @@ class TestDeterministicConformance:
                          + [np.inf])
         chi2 = chi_square_statistic(g, edges, np.full(10, 0.1))
         assert chi2 < CHI2_999[9]
+
+
+class TestDiurnalConformance:
+    """Regime-switching sampler (PR-7): stationary limit, day-cycle rate
+    profile, scalar/batch agreement, dwell-weighted mean with bursts."""
+
+    def test_stationary_limit_is_exponential(self):
+        """amplitude=0, no bursts: exactly a Poisson stream — chi-square
+        against the exponential CDF over 10 equiprobable bins."""
+        mean = 40.0
+        g = batch_gaps(DiurnalArrivals(mean, day_ms=1e6, amplitude=0.0),
+                       256, 400, seed=0).ravel()
+        q = np.linspace(0.0, 1.0, 11)
+        edges = -mean * np.log1p(-q[:-1])
+        edges = np.append(edges, np.inf)
+        chi2 = chi_square_statistic(g, edges, np.full(10, 0.1))
+        assert chi2 < CHI2_999[9]
+        assert g.mean() == pytest.approx(mean, rel=4.0 / math.sqrt(g.size))
+        assert g.std() / g.mean() == pytest.approx(1.0, abs=0.02)
+
+    def test_day_cycle_shifts_arrival_mass(self):
+        """With phase_frac=0 the rate peaks in the first half-day
+        (⟨1+a·sin⟩ = 1+2a/π ≈ 1.48 vs 0.52): arrivals must concentrate
+        there, ~2.8× the second half-day's count."""
+        day = 2000.0
+        proc = DiurnalArrivals(10.0, day_ms=day, amplitude=0.75)
+        g = batch_gaps(proc, 64, 400, seed=1)
+        t = np.cumsum(g, axis=1)
+        frac = (t / day) % 1.0
+        first = int(np.sum(frac < 0.5))
+        second = int(np.sum(frac >= 0.5))
+        ratio = first / second
+        assert 2.0 < ratio < 4.0
+
+    def test_modulation_overdisperses(self):
+        """Mixing exponential rates across the day pushes CV above 1."""
+        g = batch_gaps(DiurnalArrivals(10.0, day_ms=2000.0, amplitude=0.9),
+                       128, 400, seed=2).ravel()
+        assert g.std() / g.mean() > 1.1
+
+    def test_scalar_loop_matches_batch_moments(self):
+        proc = DiurnalArrivals(20.0, day_ms=5000.0, amplitude=0.6)
+        scalar = np.concatenate([
+            proc.inter_arrival_times(4000, seed=s) for s in range(4)
+        ])
+        batch = batch_gaps(proc, 64, 250, seed=3).ravel()
+        assert scalar.mean() == pytest.approx(batch.mean(), rel=0.05)
+        assert scalar.std() == pytest.approx(batch.std(), rel=0.10)
+
+    def test_burst_layer_mean_is_dwell_weighted(self):
+        # amplitude 0 so the quiet-state gap mean is exactly mean_ms: with
+        # modulation on, arrivals concentrate in high-rate phases and the
+        # *arrival-weighted* gap mean sits below the time-averaged one
+        proc = DiurnalArrivals(
+            100.0, day_ms=1e5, amplitude=0.0,
+            burst_ms=2.0, mean_burst_len=8.0, mean_quiet_len=8.0,
+        )
+        want = proc.mean_period_ms()
+        assert want == pytest.approx((8 * 2.0 + 8 * 100.0) / 16.0)
+        g = batch_gaps(proc, 256, 400, seed=4).ravel()
+        # dwell-chain mixing is slow; 100k correlated gaps ⇒ loose 5% band
+        assert g.mean() == pytest.approx(want, rel=0.05)
+
+    def test_amplitude_bounds_rejected(self):
+        for bad in (1.0, 1.5, -0.1, math.nan):
+            with pytest.raises(ValueError):
+                DiurnalArrivals(40.0, day_ms=1000.0, amplitude=bad)
+
+
+class TestFlashCrowdConformance:
+    """Deterministic-length flash crowds over a Poisson baseline (PR-7)."""
+
+    def test_mean_period_closed_form(self):
+        proc = FlashCrowdArrivals(quiet_ms=4000.0, flash_gap_ms=5.0,
+                                  flash_len=16, flash_every=8.0)
+        want = (8.0 * 4000.0 + 16 * 5.0) / (8.0 + 16)
+        assert proc.mean_period_ms() == pytest.approx(want)
+        g = batch_gaps(proc, 256, 400, seed=5).ravel()
+        assert g.mean() == pytest.approx(want, rel=0.05)
+
+    def test_flash_fraction_matches_trigger_rate(self):
+        """Per cycle: ~flash_every quiet gaps (geometric) then exactly
+        flash_len flash gaps ⇒ flash fraction flash_len/(flash_every+len)."""
+        proc = FlashCrowdArrivals(quiet_ms=4000.0, flash_gap_ms=5.0,
+                                  flash_len=16, flash_every=8.0)
+        g = batch_gaps(proc, 256, 400, seed=6).ravel()
+        frac = float(np.mean(g < 100.0))   # 100 ms splits the two modes
+        assert frac == pytest.approx(16.0 / 24.0, abs=0.03)
+
+    def test_quiet_limit_is_exponential(self):
+        """flash_every → ∞: flashes never trigger, leaving the pure quiet
+        Poisson baseline."""
+        mean = 40.0
+        proc = FlashCrowdArrivals(quiet_ms=mean, flash_gap_ms=1.0,
+                                  flash_len=8, flash_every=1e12)
+        g = batch_gaps(proc, 256, 400, seed=7).ravel()
+        q = np.linspace(0.0, 1.0, 11)
+        edges = -mean * np.log1p(-q[:-1])
+        edges = np.append(edges, np.inf)
+        chi2 = chi_square_statistic(g, edges, np.full(10, 0.1))
+        assert chi2 < CHI2_999[9]
+
+    def test_bimodal_gaps_are_bursty(self):
+        proc = FlashCrowdArrivals(quiet_ms=4000.0, flash_gap_ms=5.0)
+        g = batch_gaps(proc, 128, 400, seed=8).ravel()
+        assert g.std() / g.mean() > 1.2
+
+    def test_scalar_loop_matches_batch_moments(self):
+        proc = FlashCrowdArrivals(quiet_ms=1000.0, flash_gap_ms=10.0,
+                                  flash_len=16, flash_every=6.0)
+        scalar = np.concatenate([
+            proc.inter_arrival_times(4000, seed=s) for s in range(4)
+        ])
+        batch = batch_gaps(proc, 64, 250, seed=9).ravel()
+        # bimodal mixture (quiet 1000 ms vs flash 10 ms): the sample-mean sd
+        # at 16k gaps is ~2.5%, so a 10% band is ≥ 4σ
+        assert scalar.mean() == pytest.approx(batch.mean(), rel=0.10)

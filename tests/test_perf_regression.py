@@ -64,6 +64,20 @@ def test_check_bench_json_mc_and_costs_fields():
     assert pr.check_bench_json(costs, scale=1.0)[0]["ok"]
 
 
+def test_check_bench_json_policy_field():
+    good = {"kind": "policy",
+            "throughput": {"rollout": {"steps_per_s": 1e9}}}
+    assert pr.check_bench_json(good, scale=1.0)[0]["ok"]
+    bad = {"kind": "policy",
+           "throughput": {"rollout": {"steps_per_s": 10.0}}}
+    rec = pr.check_bench_json(bad, scale=1.0)[0]
+    assert not rec["ok"]
+    assert rec["name"] == "bench_policy_steps_per_s"
+    # a policy artifact that dropped its throughput section must fail loudly
+    missing = pr.check_bench_json({"kind": "policy"}, scale=1.0)[0]
+    assert not missing["ok"] and "missing field" in missing["error"]
+
+
 def test_missing_throughput_field_fails_explicitly():
     recs = pr.check_bench_json({"kind": "fleet"}, scale=1.0)
     assert len(recs) == 1
