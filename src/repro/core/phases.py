@@ -121,6 +121,24 @@ class WorkloadItem:
         tot = self.total_energy_mj
         return self.config_energy_mj / tot if tot else 0.0
 
+    def with_phase(self, phase: Phase) -> "WorkloadItem":
+        """This item with ``phase`` substituted for its same-named phase
+        (prepended when absent — configuration leads by convention).  The
+        bridge from :mod:`repro.core.config_phase` device settings to a
+        simulatable item:
+
+        >>> from repro.core.config_phase import SPARTAN7_XC7S15, BEST_PARAMS
+        >>> item = paper_lstm_item().with_phase(
+        ...     SPARTAN7_XC7S15.config_phase(BEST_PARAMS))
+        >>> round(item.config_energy_mj, 2)
+        11.85
+        """
+        if self.has_phase(phase.name):
+            phases = tuple(phase if p.name == phase.name else p for p in self.phases)
+        else:
+            phases = (phase,) + self.phases
+        return dataclasses.replace(self, phases=phases)
+
     # ---- (de)serialization (YAML-friendly dicts) -----------------------------
     def to_dict(self) -> dict:
         return {

@@ -61,6 +61,14 @@ class SimResult:
     def lifetime_hours(self) -> float:
         return self.lifetime_ms / 3_600_000.0
 
+    @property
+    def ledger(self):
+        """Phase-resolved :class:`repro.obs.ledger.EnergyLedger` view of
+        ``energy_by_phase_mj`` (axes sum to ``energy_used_mj`` ≤1e-9 rel)."""
+        from repro.obs.ledger import EnergyLedger
+
+        return EnergyLedger.from_phase_dict(self.energy_by_phase_mj)
+
 
 def _iter_events(
     strategy: Strategy, request_period_ms: float, max_items: int | None = None
@@ -176,7 +184,11 @@ def simulate(
             res = SimResult(strategy.name, t_req, 0, 0.0, 0.0, budget, {})
             return (res, events) if trace else res
         used += e_init
-        by_phase["initial_configuration"] = e_init
+        # the calibrated power-up ramp is reported on its own ledger row,
+        # not folded into the configuration phase
+        by_phase["initial_configuration"] = em.idlewait_init_energy_mj(item, 0.0)
+        if strategy.powerup_overhead_mj:
+            by_phase["initial_powerup"] = strategy.powerup_overhead_mj
 
     gen = _iter_events(strategy, t_req)
     if not is_onoff:
@@ -257,10 +269,13 @@ def _simulate_fast(
         by_phase = {
             p.name: n * p.energy_mj for p in item.phases if p.name != CONFIGURATION
         }
-        by_phase["initial_configuration"] = em.idlewait_init_energy_mj(
-            item, strategy.powerup_overhead_mj
-        )
+        # n = 0 uses no energy in the closed form (Eq. 2), so the init rows
+        # only appear once something was actually admitted — keeps the
+        # per-phase dict summing to energy_used_mj (the ledger contract)
         if n >= 1:
+            by_phase["initial_configuration"] = em.idlewait_init_energy_mj(item, 0.0)
+            if strategy.powerup_overhead_mj:
+                by_phase["initial_powerup"] = strategy.powerup_overhead_mj
             by_phase[IDLE] = (n - 1) * em.idle_energy_mj(item, t_req, strategy.idle_power_mw)
     return SimResult(
         strategy=strategy.name,
@@ -294,6 +309,14 @@ class TraceSimResult:
     def energy_per_item_mj(self) -> float:
         return self.energy_used_mj / self.n_items if self.n_items else math.inf
 
+    @property
+    def ledger(self):
+        """Phase-resolved :class:`repro.obs.ledger.EnergyLedger` view of
+        ``energy_by_phase_mj`` (axes sum to ``energy_used_mj`` ≤1e-9 rel)."""
+        from repro.obs.ledger import EnergyLedger
+
+        return EnergyLedger.from_phase_dict(self.energy_by_phase_mj)
+
 
 def simulate_trace(
     item: WorkloadItem,
@@ -302,6 +325,7 @@ def simulate_trace(
     e_budget_mj: float = em.PAPER_ENERGY_BUDGET_MJ,
     powerup_overhead_mj: float = 0.0,
     policy_name: Optional[str] = None,
+    recorder=None,
 ) -> TraceSimResult:
     """Replay ``arrival_times_ms`` against an energy budget.
 
@@ -324,6 +348,13 @@ def simulate_trace(
       powered off — the item is admitted only if all of that fits the
       remaining budget;
     * the first item always pays the initial configuration (E_init).
+
+    The per-phase breakdown (``energy_by_phase_mj`` / ``.ledger``) reports
+    the calibrated power-up overhead on its own ``powerup`` /
+    ``initial_powerup`` rows, separate from the configuration phase.  Pass
+    a :class:`repro.obs.trace.TraceRecorder` as ``recorder`` to capture the
+    state-transition timeline (arrivals, idle spans, timeout releases,
+    reconfigurations, service spans) for Chrome-trace export.
     """
     # Validate the trace up front: a negative or non-monotonic timestamp
     # would silently corrupt the idle-gap accounting (gaps are differences
@@ -360,7 +391,8 @@ def simulate_trace(
     exec_phases = [p for p in item.phases if p.name != CONFIGURATION]
     e_exec = item.execution_energy_mj
     t_exec = item.execution_time_ms
-    e_config = item.config_energy_mj + powerup_overhead_mj
+    e_cfg_pure = item.config_energy_mj
+    e_config = e_cfg_pure + powerup_overhead_mj
     t_config = item.config_time_ms
     p_idle = policy.idle_power_mw
 
@@ -382,6 +414,8 @@ def simulate_trace(
 
     for a in arrivals:
         start = max(a, completion)
+        if recorder is not None:
+            recorder.instant("arrival", a, track="requests")
         # ---- the gap the policy managed (previous completion → start) ----
         idle_t = 0.0
         released_here = False
@@ -394,23 +428,45 @@ def simulate_trace(
         cost = idle_e + (e_config if reconfig else 0.0) + e_exec
         if energy + cost > budget + eps * max(1.0, cost):
             exhausted = True
+            if recorder is not None:
+                recorder.instant("budget_exhausted", a, track="device")
             break
         if idle_e:
             charge(IDLE, idle_e)
+            if recorder is not None:
+                recorder.complete(IDLE, completion, idle_t, track="device")
         if released_here:
             releases += 1
             resident = False
+            if recorder is not None:
+                recorder.instant("timeout_release", completion + idle_t,
+                                 track="device")
         if reconfig:
             # The initial bring-up is pre-staged at system start (Eq. 2's
             # E_init: energy charged, no time against the first period);
-            # re-configurations happen inline and delay service.
+            # re-configurations happen inline and delay service.  The
+            # power-up overhead books on its own ledger row.
+            initial = configurations == 0
             charge("configuration" if configurations else "initial_configuration",
-                   e_config)
+                   e_cfg_pure)
+            if powerup_overhead_mj:
+                charge("powerup" if configurations else "initial_powerup",
+                       powerup_overhead_mj)
+            if recorder is not None:
+                if initial:
+                    recorder.instant("initial_configuration", start,
+                                     track="device")
+                else:
+                    recorder.complete("configure", start, t_config,
+                                      track="device")
             if configurations:
                 start += t_config
             configurations += 1
         for p in exec_phases:
             charge(p.name, p.energy_mj)
+        if recorder is not None:
+            recorder.complete("serve", start, t_exec, track="device",
+                              request=n)
         completion = start + t_exec
         resident = True
         n += 1

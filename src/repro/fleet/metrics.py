@@ -131,6 +131,8 @@ def periodic_summary(result: PeriodicFleetResult) -> dict:
             )
         ),
         **_energy_per_request(result.energy_mj, n),
+        # phase-resolved energy breakdown (sums back to total_energy_mj)
+        "ledger": result.ledger().aggregate().to_dict(),
         # steps, not wall time: in periodic mode step k happens at
         # k × the *device's own* period, so a heterogeneous-period fleet
         # has no single time axis
@@ -164,6 +166,7 @@ def routed_summary(result: RoutedFleetResult) -> dict:
         "final_modes": _mode_counts(result),
         "lifetime_ms": _stats(completion[served > 0]) if served.any() else _stats(np.array([])),
         **_energy_per_request(energy, served),
+        "ledger": result.ledger().aggregate().to_dict(),
         "latency_ms": latency_percentiles(result),
         "devices_alive_over_time": devices_alive_curve(
             result.alive_over_time, result.dt_ms

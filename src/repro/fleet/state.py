@@ -198,13 +198,16 @@ class DeviceSpec:
             "t_config_ms": item.config_time_ms,
             "p_idle_mw": p_idle,
             "timeout_ms": self.timeout_ms(),
+            # power-up ramp alone — lets the energy ledger report the
+            # reconfiguration overhead separately from the configure phase
+            "e_overhead_mj": self.powerup_overhead_mj,
         }
 
 
 _FLOAT_FIELDS = (
     "period_ms", "e_budget_mj", "e_item_mj", "e_init_mj", "e_idle_mj",
     "e_exec_mj", "t_exec_ms", "e_config_mj", "t_config_ms", "p_idle_mw",
-    "timeout_ms",
+    "timeout_ms", "e_overhead_mj",
 )
 
 
@@ -233,6 +236,7 @@ class FleetParams:
     t_config_ms: jnp.ndarray
     p_idle_mw: jnp.ndarray
     timeout_ms: jnp.ndarray
+    e_overhead_mj: jnp.ndarray
 
     # ---- pytree protocol ----------------------------------------------------
     def tree_flatten(self):
@@ -344,6 +348,7 @@ class FleetState:
     """
 
     energy_mj: jnp.ndarray        # f64 — energy spent so far
+    idle_energy_mj: jnp.ndarray   # f64 — the idle-waiting share of energy_mj
     n_served: jnp.ndarray         # i64 — requests completed
     n_configs: jnp.ndarray        # i64 — configurations paid (incl. initial)
     n_released: jnp.ndarray       # i64 — mid-gap timeout releases
@@ -371,6 +376,7 @@ class FleetState:
             i64 = lambda v: jnp.full((n_devices,), v, dtype=jnp.int64)    # noqa: E731
             return FleetState(
                 energy_mj=f64(0.0),
+                idle_energy_mj=f64(0.0),
                 n_served=i64(0),
                 n_configs=i64(0),
                 n_released=i64(0),

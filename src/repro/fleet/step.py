@@ -75,6 +75,32 @@ class PeriodicFleetResult:
     alive: np.ndarray             # bool (N,) — still admitting at horizon end
     alive_over_time: np.ndarray   # i32 (n_steps,) — devices alive per step
 
+    def ledger(self):
+        """Per-device phase-resolved :class:`repro.obs.ledger.EnergyLedger`
+        (shape ``(N,)`` per axis), derived from the admitted counts through
+        the same closed forms as ``energy_mj`` — axes sum to ``energy_mj``
+        within 1e-9 relative (the conservation contract)."""
+        from repro.obs.ledger import EnergyLedger
+
+        p = self.params
+        nf = self.n_items.astype(np.float64)
+        any_items = (self.n_items > 0).astype(np.float64)
+        is_onoff = np.asarray(p.is_onoff)
+        ovh = np.asarray(p.e_overhead_mj)
+        cfg_pure = np.asarray(p.e_config_mj) - ovh
+        # On-Off pays configure+overhead per item; Idle-Waiting once (E_init)
+        n_cfg = np.where(is_onoff, nf, any_items)
+        idle = np.where(
+            is_onoff, 0.0, any_items * (nf - 1.0) * np.asarray(p.e_idle_mj)
+        )
+        return EnergyLedger.from_axes(
+            configure=n_cfg * cfg_pure,
+            compute=nf * np.asarray(p.e_exec_mj),
+            idle=idle,
+            off=np.zeros_like(nf),
+            overhead=n_cfg * ovh,
+        )
+
 
 def _periodic_scan(params: FleetParams, n_steps: int):
     eps = em.FLOOR_EPS
@@ -157,6 +183,11 @@ class RoutedFleetResult:
     queued_over_time: np.ndarray  # i32 (K,)
     latency_ms: Optional[np.ndarray]   # f32 (K, N) — served-request latency
     served_mask: Optional[np.ndarray]  # bool (K, N)
+    # state-transition event masks, populated with collect_events=True
+    reconfig_mask: Optional[np.ndarray] = None   # bool (K, N) — serve paid a config
+    released_mask: Optional[np.ndarray] = None   # bool (K, N) — timeout release
+    queue_depth: Optional[np.ndarray] = None     # i32 (K, N) — post-tick backlog
+    dropped_per_tick: Optional[np.ndarray] = None  # i32 (K, N) — overflow drops
 
     @property
     def n_served(self) -> np.ndarray:
@@ -165,6 +196,27 @@ class RoutedFleetResult:
     @property
     def energy_mj(self) -> np.ndarray:
         return np.asarray(self.state.energy_mj)
+
+    def ledger(self):
+        """Per-device phase-resolved :class:`repro.obs.ledger.EnergyLedger`
+        (shape ``(N,)`` per axis): configurations split into the pure
+        configure energy and the power-up overhead, idle energy from the
+        scan's own accumulator — axes sum to ``state.energy_mj`` within
+        1e-9 relative."""
+        from repro.obs.ledger import EnergyLedger
+
+        p = self.params
+        n_cfg = np.asarray(self.state.n_configs).astype(np.float64)
+        served = np.asarray(self.state.n_served).astype(np.float64)
+        ovh = np.asarray(p.e_overhead_mj)
+        cfg_pure = np.asarray(p.e_config_mj) - ovh
+        return EnergyLedger.from_axes(
+            configure=n_cfg * cfg_pure,
+            compute=served * np.asarray(p.e_exec_mj),
+            idle=np.asarray(self.state.idle_energy_mj),
+            off=np.zeros_like(served),
+            overhead=n_cfg * ovh,
+        )
 
     def final_modes(self) -> np.ndarray:
         """Per-device mode codes at horizon end (state.MODE_*): DEAD if the
@@ -190,8 +242,15 @@ class RoutedFleetResult:
 
 
 def _routed_body(params: FleetParams, dt_ms, router_code: Optional[int],
-                 collect_latency: bool, capacity: int):
-    """Build the scan body; ``router_code`` None means per-device counts."""
+                 collect_latency: bool, capacity: int,
+                 collect_events: bool = False):
+    """Build the scan body; ``router_code`` None means per-device counts.
+
+    ``collect_events=True`` appends per-tick state-transition outputs
+    (reconfigure / release masks, queue depth, drops) after the latency
+    outputs — the raw material :func:`repro.obs.trace.routed_timeline`
+    rebuilds a Chrome-trace timeline from.  Existing ``ys`` indices are
+    unchanged, so callers that ignore events are unaffected."""
 
     def body(state: FleetState, x):
         k, arr = x
@@ -259,6 +318,8 @@ def _routed_body(params: FleetParams, dt_ms, router_code: Optional[int],
 
         new_state = FleetState(
             energy_mj=energy,
+            # the idle-waiting share of the same accumulation (ledger axis)
+            idle_energy_mj=state.idle_energy_mj + jnp.where(serve, idle_e, 0.0),
             n_served=state.n_served + serve.astype(jnp.int64),
             n_configs=state.n_configs + (serve & reconfig).astype(jnp.int64),
             n_released=state.n_released + (serve & released).astype(jnp.int64),
@@ -279,15 +340,24 @@ def _routed_body(params: FleetParams, dt_ms, router_code: Optional[int],
         )
         if collect_latency:
             ys = ys + (latency.astype(jnp.float32), serve)
+        if collect_events:
+            ys = ys + (
+                serve & reconfig,
+                serve & released,
+                new_state.q_len,
+                (counts - acc).astype(jnp.int32),
+            )
         return new_state, ys
 
     return body
 
 
 @functools.lru_cache(maxsize=None)
-def _routed_scan_fn(router_code: Optional[int], collect_latency: bool, capacity: int):
+def _routed_scan_fn(router_code: Optional[int], collect_latency: bool,
+                    capacity: int, collect_events: bool = False):
     def scan_fn(params, state0, steps, arrivals, dt_ms):
-        body = _routed_body(params, dt_ms, router_code, collect_latency, capacity)
+        body = _routed_body(params, dt_ms, router_code, collect_latency,
+                            capacity, collect_events)
         return lax.scan(body, state0, (steps, arrivals))
 
     return jax.jit(scan_fn)
@@ -300,6 +370,7 @@ def run_routed(
     router: Optional[str] = "round_robin",
     queue_capacity: int = 16,
     collect_latency: bool = True,
+    collect_events: bool = False,
     jit: bool = True,
 ) -> RoutedFleetResult:
     """Simulate routed traffic over ``K = len(arrivals)`` ticks of ``dt_ms``.
@@ -337,10 +408,12 @@ def run_routed(
         state0 = FleetState.init(params.n_devices, queue_capacity)
         dt = jnp.asarray(dt_ms, dtype=jnp.float64)
         if jit:
-            fn = _routed_scan_fn(code, collect_latency, queue_capacity)
+            fn = _routed_scan_fn(code, collect_latency, queue_capacity,
+                                 collect_events)
             state, ys = fn(params, state0, steps, arrivals, dt)
         else:
-            body = _routed_body(params, dt, code, collect_latency, queue_capacity)
+            body = _routed_body(params, dt, code, collect_latency,
+                                queue_capacity, collect_events)
             state, ys = lax.scan(body, state0, (steps, arrivals))
         # global drops (dead fleet / unroutable) land on device 0's ledger so
         # totals stay conserved
@@ -360,4 +433,8 @@ def run_routed(
         queued_over_time=np.asarray(ys[2]),
         latency_ms=np.asarray(ys[4]) if collect_latency else None,
         served_mask=np.asarray(ys[5]) if collect_latency else None,
+        reconfig_mask=np.asarray(ys[-4]) if collect_events else None,
+        released_mask=np.asarray(ys[-3]) if collect_events else None,
+        queue_depth=np.asarray(ys[-2]) if collect_events else None,
+        dropped_per_tick=np.asarray(ys[-1]) if collect_events else None,
     )

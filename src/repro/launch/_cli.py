@@ -11,7 +11,11 @@ Nothing here imports jax at module scope — ``--help`` stays instant.
 from __future__ import annotations
 
 import argparse
+import datetime
 import json
+import os
+import platform
+import subprocess
 import sys
 import time
 
@@ -114,9 +118,74 @@ def finish_payload(payload: dict, elapsed_s: float, **meta) -> dict:
     return payload
 
 
+def _git_sha() -> str | None:
+    """HEAD SHA of the repo this module lives in, or None outside git."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=5,
+        )
+    except (OSError, subprocess.SubprocessError):
+        return None
+    sha = out.stdout.strip()
+    return sha if out.returncode == 0 and sha else None
+
+
+def run_manifest(seed=None) -> dict:
+    """Provenance block stamped into every emitted payload: git SHA,
+    interpreter/library versions, backend, seed, wall-clock.  Every field
+    degrades to None rather than raising — a manifest must never be the
+    reason a run fails."""
+    versions: dict[str, str | None] = {
+        "python": platform.python_version(),
+    }
+    backend = None
+    try:
+        import jax
+
+        versions["jax"] = jax.__version__
+        try:
+            import jaxlib
+
+            versions["jaxlib"] = jaxlib.__version__
+        except Exception:
+            versions["jaxlib"] = None
+        try:
+            backend = jax.default_backend()
+        except Exception:
+            backend = None
+    except Exception:
+        versions["jax"] = None
+        versions["jaxlib"] = None
+    try:
+        import numpy
+
+        versions["numpy"] = numpy.__version__
+    except Exception:
+        versions["numpy"] = None
+    now = datetime.datetime.now(datetime.timezone.utc)
+    return {
+        "git_sha": _git_sha(),
+        "versions": versions,
+        "backend": backend,
+        "platform": platform.platform(),
+        "seed": seed,
+        "unix_time": round(now.timestamp(), 3),
+        "timestamp": now.isoformat(timespec="seconds"),
+    }
+
+
 def emit(payload: dict, out: str | None, label: str = "payload") -> None:
     """JSON to ``out`` (with a stderr receipt) or stdout — the shared tail
-    of every launcher's ``main``."""
+    of every launcher's ``main``.  Stamps a :func:`run_manifest` into the
+    payload (under ``"manifest"``) unless the launcher already did."""
+    if isinstance(payload, dict) and "manifest" not in payload:
+        seed = None
+        config = payload.get("config")
+        if isinstance(config, dict):
+            seed = config.get("seed")
+        payload["manifest"] = run_manifest(seed=seed)
     text = json.dumps(payload, indent=2)
     if out:
         with open(out, "w") as f:

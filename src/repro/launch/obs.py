@@ -1,0 +1,184 @@
+"""Observability CLI — one run, every lens: ledger, metrics, trace, report.
+
+Runs a mixed-strategy fleet twice (periodic duty-cycle + routed traffic),
+pulls the phase-resolved :class:`~repro.obs.ledger.EnergyLedger` off each
+path, self-checks conservation against the paths' own energy totals *and*
+the N=1 scalar oracle, fills a :class:`~repro.obs.metrics.MetricsRegistry`
+from the routed run, exports a Chrome-trace/Perfetto timeline, and emits a
+JSON report (plus optional markdown) stamped with the run manifest.
+
+It also times an observability-*disabled* periodic run in the
+``BENCH_fleet.json`` layout (``throughput.periodic.fleet.devices_per_s``),
+so :mod:`repro.testing.perf_regression` can assert the ledger/trace plumbing
+did not tax the hot path.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.obs --smoke \
+        --out OBS_report.json --md-out OBS_report.md --trace-out OBS_trace.json
+"""
+from __future__ import annotations
+
+import math
+import sys
+import time
+
+from repro.launch._cli import emit, make_parser, powerup_overhead_mj
+
+
+def _scalar_check(args) -> dict:
+    """Scalar-oracle conservation: ``simulate``'s per-phase dict vs its own
+    total, for both paper strategies."""
+    from repro.core.simulator import simulate
+    from repro.core.strategies import IdlePowerMethod
+    from repro.core.workload import ExperimentSpec, WorkloadSpec
+    from repro.core.phases import paper_lstm_item
+
+    out = {}
+    for strat in ("on_off", "idle_waiting"):
+        spec = ExperimentSpec(
+            workload=WorkloadSpec(args.budget_j, args.period_ms),
+            item=paper_lstm_item(),
+            strategy_kind=strat,
+            method=IdlePowerMethod(args.method),
+            powerup_overhead_mj=powerup_overhead_mj(args),
+        )
+        res = simulate(spec)
+        out[f"scalar[{strat}]"] = res.ledger.assert_conserves(res.energy_used_mj)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = make_parser(
+        prog="python -m repro.launch.obs",
+        description="Phase-resolved observability report for one fleet run.",
+        jit_flag=False,
+        calibrated_default=True,
+        out_default="OBS_report.json",
+    )
+    ap.add_argument("--devices", type=int, default=256)
+    ap.add_argument("--horizon", type=float, default=10.0, help="simulated seconds")
+    ap.add_argument("--period-ms", type=float, default=40.0)
+    ap.add_argument("--method", default="method1+2",
+                    choices=["baseline", "method1", "method1+2"])
+    ap.add_argument("--router", default="round_robin",
+                    choices=["round_robin", "least_loaded", "power_aware"])
+    ap.add_argument("--budget-j", type=float, default=4147.0)
+    ap.add_argument("--queue-capacity", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the Chrome-trace JSON timeline here")
+    ap.add_argument("--md-out", default=None, metavar="PATH",
+                    help="write the markdown report here")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: 64 devices")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.devices = min(args.devices, 64)
+    if args.devices <= 0:
+        raise SystemExit("--devices must be positive")
+
+    import numpy as np
+
+    from repro.core.strategies import IdlePowerMethod
+    from repro.fleet import run_periodic, run_routed, uniform_fleet
+    from repro.obs import routed_metrics, routed_timeline, run_report, trace_summary
+    from repro.obs.report import write_report
+
+    horizon_ms = args.horizon * 1000.0
+    n_steps = max(1, int(math.ceil(horizon_ms / args.period_ms)))
+    params = uniform_fleet(
+        args.devices,
+        strategies=("on_off", "idle_waiting", "adaptive"),
+        method=IdlePowerMethod(args.method),
+        request_period_ms=args.period_ms,
+        e_budget_mj=args.budget_j * 1000.0,
+        powerup_overhead_mj=powerup_overhead_mj(args),
+    )
+    config = {
+        k: getattr(args, k)
+        for k in ("devices", "horizon", "period_ms", "method", "router",
+                  "budget_j", "queue_capacity", "seed", "calibrated", "smoke")
+    }
+
+    # ---- periodic path: ledger + conservation -----------------------------
+    pres = run_periodic(params, n_steps)
+    pledger = pres.ledger()
+    conservation = _scalar_check(args)
+    conservation["fleet_periodic"] = pledger.assert_conserves(pres.energy_mj)
+
+    # ---- routed path: events on, metrics + timeline -----------------------
+    counts = np.full(n_steps, args.devices, dtype=np.int32)  # 1 req/device/tick
+    rres = run_routed(
+        params, counts, args.period_ms, router=args.router,
+        queue_capacity=args.queue_capacity,
+        collect_latency=True, collect_events=True,
+    )
+    rledger = rres.ledger()
+    conservation["fleet_routed"] = rledger.assert_conserves(
+        np.asarray(rres.state.energy_mj)
+    )
+    registry = routed_metrics(rres)
+    recorder = routed_timeline(rres)
+    chrome = recorder.to_chrome()
+    if args.trace_out:
+        recorder.write(args.trace_out)
+        print(f"wrote trace to {args.trace_out}", file=sys.stderr)
+
+    # ---- observability-disabled throughput (perf-regression layout) -------
+    run_periodic(params, n_steps)                     # warm-up: compile once
+    t0 = time.perf_counter()
+    run_periodic(params, n_steps)
+    elapsed = time.perf_counter() - t0
+    throughput = {
+        "periodic": {
+            "fleet": {
+                "elapsed_s": round(elapsed, 6),
+                "devices": args.devices,
+                "devices_per_s": round(args.devices / elapsed, 1)
+                if elapsed > 0 else float("inf"),
+                "device_steps_per_s": round(args.devices * n_steps / elapsed, 1)
+                if elapsed > 0 else None,
+            }
+        }
+    }
+
+    report = run_report(
+        ledger=pledger + rledger.aggregate(),
+        metrics=registry,
+        summary={
+            "n_steps": n_steps,
+            "periodic": {
+                "devices_alive_at_end": int(np.sum(pres.alive)),
+                "items_total": int(np.sum(pres.n_items)),
+                "energy_total_mj": float(np.sum(pres.energy_mj)),
+            },
+            "routed": {
+                "router": args.router,
+                "requests_served": int(np.sum(np.asarray(rres.state.n_served))),
+                "requests_dropped": int(np.sum(np.asarray(rres.state.n_dropped))),
+                "energy_total_mj": float(np.sum(np.asarray(rres.state.energy_mj))),
+            },
+        },
+        trace=trace_summary(chrome),
+        conservation=conservation,
+        throughput=throughput,
+        config=config,
+    )
+    emit(report, args.out, label="observability report")
+    if args.md_out:
+        write_report(report, md_out=args.md_out)
+        print(f"wrote markdown report to {args.md_out}", file=sys.stderr)
+
+    worst = max(conservation.values())
+    print(
+        f"obs: {args.devices} devices x {n_steps} steps | "
+        f"conservation worst {worst:.2e} rel | "
+        f"{report['trace']['n_events']} trace events | "
+        f"{throughput['periodic']['fleet']['devices_per_s']} devices/s disabled-path"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -153,6 +153,9 @@ class PeriodicEnsembleResult:
     device_lifetime_ms: Welford
     device_energy_mj: Welford
     device_items: Welford
+    # per-seed fleet-aggregate phase ledger (each axis shape (S,)); axes sum
+    # to total_energy_mj within 1e-9 relative (the conservation contract)
+    ledger: Optional[object] = None
     # optional full per-device samples, shape (S, N)
     per_device_items: Optional[np.ndarray] = None
     per_device_energy_mj: Optional[np.ndarray] = None
@@ -180,7 +183,7 @@ def _periodic_ens_scan(params: FleetParams, limit, gaps_prev, gaps_next):
 
     def body(carry, g):
         gp, gn = g
-        n, alive, cum, life = carry
+        n, alive, cum, life, idle_acc = carry
         idle_t = jnp.maximum(gp - params.t_exec_ms, 0.0)
         idle_e = params.p_idle_mw * idle_t / 1000.0
         cost = jnp.where(
@@ -188,9 +191,13 @@ def _periodic_ens_scan(params: FleetParams, limit, gaps_prev, gaps_next):
         )
         admit = alive & (cum + cost <= limit)
         cum = jnp.where(admit, cum + cost, cum)
+        # the idle-waiting share of the same accumulation (ledger axis)
+        idle_acc = jnp.where(
+            admit & ~params.is_onoff, idle_acc + idle_e, idle_acc
+        )
         n = n + admit.astype(jnp.int64)
         life = jnp.where(admit, life + gn, life)
-        return (n, admit, cum, life), None
+        return (n, admit, cum, life, idle_acc), None
 
     shape = params.period_ms.shape
     carry0 = (
@@ -201,9 +208,12 @@ def _periodic_ens_scan(params: FleetParams, limit, gaps_prev, gaps_next):
         # Idle-Waiting owes its one-time bring-up before the first item
         jnp.where(params.is_onoff, 0.0, params.e_init_mj),
         jnp.zeros(shape, dtype=jnp.float64),
+        jnp.zeros(shape, dtype=jnp.float64),
     )
-    (n, alive, cum, life), _ = lax.scan(body, carry0, (gaps_prev, gaps_next))
-    return n, alive, cum, life
+    (n, alive, cum, life, idle_acc), _ = lax.scan(
+        body, carry0, (gaps_prev, gaps_next)
+    )
+    return n, alive, cum, life, idle_acc
 
 
 def _periodic_ens_vmapped(params, limit, gaps_prev, gaps_next):
@@ -249,7 +259,7 @@ def periodic_ensemble(
             axis=1,
         )
         fn = _periodic_ens_jit if jit else _periodic_ens_vmapped
-        n, alive, cum, life = fn(params, limit, gaps_prev, gaps)
+        n, alive, cum, life, idle_acc = fn(params, limit, gaps_prev, gaps)
     n = np.asarray(n)
     # the scan pre-loads E_init into the energy carry; a device that admitted
     # nothing spent nothing (the oracle's n = 0 convention)
@@ -259,6 +269,7 @@ def periodic_ensemble(
     total_energy = cum.sum(axis=1)
     with np.errstate(invalid="ignore", divide="ignore"):
         epr = np.where(total_items > 0, total_energy / np.maximum(total_items, 1), np.nan)
+    ledger = _periodic_ledger(params, n, np.asarray(idle_acc))
     return PeriodicEnsembleResult(
         params=params,
         process="direct",
@@ -271,9 +282,49 @@ def periodic_ensemble(
         device_lifetime_ms=Welford().update(life),
         device_energy_mj=Welford().update(cum),
         device_items=Welford().update(n.astype(np.float64)),
+        ledger=ledger,
         per_device_items=n if keep_device_samples else None,
         per_device_energy_mj=cum if keep_device_samples else None,
         per_device_lifetime_ms=life if keep_device_samples else None,
+    )
+
+
+def _periodic_ledger(params: FleetParams, n: np.ndarray, idle: np.ndarray):
+    """Per-seed fleet-aggregate :class:`repro.obs.ledger.EnergyLedger`
+    (each axis ``(S,)``) from the ``(S, N)`` admitted counts and the scan's
+    idle-energy accumulator, through the same per-item constants the
+    admission costs used."""
+    from repro.obs.ledger import EnergyLedger
+
+    is_onoff = np.asarray(params.is_onoff)
+    ovh = np.asarray(params.e_overhead_mj)
+    cfg_pure = np.asarray(params.e_config_mj) - ovh
+    e_exec = np.asarray(params.e_exec_mj)
+    nf = n.astype(np.float64)                          # (S, N)
+    # On-Off pays configure+overhead per item; Idle-Waiting once (E_init)
+    n_cfg = np.where(is_onoff, nf, (n > 0).astype(np.float64))
+    return EnergyLedger.from_axes(
+        configure=(n_cfg * cfg_pure).sum(axis=1),
+        compute=(nf * e_exec).sum(axis=1),
+        idle=idle.sum(axis=1),
+        off=np.zeros(n.shape[0], dtype=np.float64),
+        overhead=(n_cfg * ovh).sum(axis=1),
+    )
+
+
+def _merge_ledgers(ledgers):
+    """Concatenate per-seed ledgers along the seed axis (None passes through)."""
+    from repro.obs.ledger import AXES, EnergyLedger
+
+    if any(led is None for led in ledgers):
+        return None
+    return EnergyLedger(
+        **{
+            f"{a}_mj": np.concatenate(
+                [np.atleast_1d(np.asarray(getattr(led, f"{a}_mj"))) for led in ledgers]
+            )
+            for a in AXES
+        }
     )
 
 
@@ -300,6 +351,7 @@ def _merge_periodic(parts: list[PeriodicEnsembleResult]) -> PeriodicEnsembleResu
         device_lifetime_ms=w_life,
         device_energy_mj=w_energy,
         device_items=w_items,
+        ledger=_merge_ledgers([p.ledger for p in parts]),
         per_device_items=cat([p.per_device_items for p in parts]) if keep else None,
         per_device_energy_mj=cat([p.per_device_energy_mj for p in parts]) if keep else None,
         per_device_lifetime_ms=cat([p.per_device_lifetime_ms for p in parts]) if keep else None,
@@ -414,6 +466,9 @@ class RoutedEnsembleResult:
     # per-device moments across seeds (arrays of shape (N,))
     device_served: Welford
     device_energy_mj: Welford
+    # per-seed fleet-aggregate phase ledger (each axis shape (S,)); axes sum
+    # to total_energy_mj within 1e-9 relative (the conservation contract)
+    ledger: Optional[object] = None
     # optional full per-device samples, shape (S, N)
     per_device_served: Optional[np.ndarray] = None
     per_device_energy_mj: Optional[np.ndarray] = None
@@ -486,6 +541,7 @@ def routed_ensemble(
     energy = energy_dev.sum(axis=1)
     with np.errstate(invalid="ignore", divide="ignore"):
         epr = np.where(served > 0, energy / np.maximum(served, 1), np.nan)
+    ledger = _routed_ledger(params, state)
     return RoutedEnsembleResult(
         params=params,
         process="direct",
@@ -500,8 +556,28 @@ def routed_ensemble(
         devices_alive=alive_dev.sum(axis=1),
         device_served=Welford().update(served_dev.astype(np.float64)),
         device_energy_mj=Welford().update(energy_dev),
+        ledger=ledger,
         per_device_served=served_dev if keep_device_samples else None,
         per_device_energy_mj=energy_dev if keep_device_samples else None,
+    )
+
+
+def _routed_ledger(params: FleetParams, state: FleetState):
+    """Per-seed fleet-aggregate ledger of a routed ensemble from the final
+    carry: configuration counts split into pure configure + overhead, idle
+    energy from the scan's own accumulator."""
+    from repro.obs.ledger import EnergyLedger
+
+    n_cfg = np.asarray(state.n_configs).astype(np.float64)    # (S, N)
+    served = np.asarray(state.n_served).astype(np.float64)
+    ovh = np.asarray(params.e_overhead_mj)
+    cfg_pure = np.asarray(params.e_config_mj) - ovh
+    return EnergyLedger.from_axes(
+        configure=(n_cfg * cfg_pure).sum(axis=1),
+        compute=(served * np.asarray(params.e_exec_mj)).sum(axis=1),
+        idle=np.asarray(state.idle_energy_mj).sum(axis=1),
+        off=np.zeros(n_cfg.shape[0], dtype=np.float64),
+        overhead=(n_cfg * ovh).sum(axis=1),
     )
 
 
@@ -526,6 +602,7 @@ def _merge_routed(parts: list[RoutedEnsembleResult]) -> RoutedEnsembleResult:
         devices_alive=cat([p.devices_alive for p in parts]),
         device_served=w_served,
         device_energy_mj=w_energy,
+        ledger=_merge_ledgers([p.ledger for p in parts]),
         per_device_served=cat([p.per_device_served for p in parts]) if keep else None,
         per_device_energy_mj=cat([p.per_device_energy_mj for p in parts]) if keep else None,
     )

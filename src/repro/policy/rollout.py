@@ -75,6 +75,9 @@ def make_consts(
         "e_exec": float(item.execution_energy_mj),
         "t_exec": float(item.execution_time_ms),
         "e_config": float(item.config_energy_mj + powerup_overhead_mj),
+        # overhead share of e_config, so the energy ledger can report the
+        # power-up ramp separately from the configure phase
+        "e_overhead": float(powerup_overhead_mj),
         "t_config": float(item.config_time_ms),
         "p_idle": float(p_idle),
         "t_be": float(t_be),
@@ -104,6 +107,7 @@ def _rollout_stream(params, gaps, consts, smooth: bool):
         n=admit0.astype(jnp.float64),
         releases=jnp.float64(0.0),
         configs=admit0.astype(jnp.float64),
+        idle_mj=jnp.float64(0.0),
         lifetime=jnp.where(admit0, c["t_exec"], 0.0),
         arrival=jnp.float64(0.0),
     )
@@ -155,6 +159,8 @@ def _rollout_stream(params, gaps, consts, smooth: bool):
             n=carry["n"] + admit.astype(jnp.float64),
             releases=carry["releases"] + (admit & released).astype(jnp.float64),
             configs=carry["configs"] + (admit & released).astype(jnp.float64),
+            # the idle-waiting share of the same accumulation (ledger axis)
+            idle_mj=carry["idle_mj"] + jnp.where(admit, idle_e, 0.0),
             lifetime=jnp.where(admit, completion, carry["lifetime"]),
             arrival=a_new,
         )
@@ -167,6 +173,7 @@ def _rollout_stream(params, gaps, consts, smooth: bool):
         "n_items": final["n"],
         "releases": final["releases"],
         "configurations": final["configs"],
+        "idle_energy_mj": final["idle_mj"],
         "lifetime_ms": final["lifetime"],
     }
 
@@ -188,7 +195,9 @@ def rollout(params, gaps, consts: dict, smooth: bool = False, jit: bool = True) 
     ``consts`` — :func:`make_consts` output.  Returns per-stream arrays:
     ``energy_mj``, ``energy_smooth_mj`` (== hard init energy unless
     ``smooth``), ``n_items``, ``releases``, ``configurations``,
-    ``lifetime_ms``, each ``(n_streams,)`` float64.
+    ``idle_energy_mj`` (the idle-waiting share of ``energy_mj`` — feed the
+    output to :func:`repro.obs.ledger.ledger_from_rollout` for the full
+    phase breakdown), ``lifetime_ms``, each ``(n_streams,)`` float64.
     """
     with enable_x64():
         gaps = jnp.asarray(gaps, dtype=jnp.float64)

@@ -40,6 +40,7 @@ class ServingEngine:
         params: Any,
         max_len: int,
         perf: PerfConfig = BASELINE,
+        metrics: Optional[Any] = None,
     ):
         if not cfg.decode_supported:
             raise ValueError(f"{cfg.name} is encoder-only")
@@ -47,6 +48,10 @@ class ServingEngine:
         self.params = params
         self.max_len = max_len
         self.perf = perf
+        # optional repro.obs.metrics.MetricsRegistry — when present, the
+        # engine records generate/release/bring-up counters and latency
+        # histograms; None keeps the hot path untouched
+        self.metrics = metrics
         self._prefill = jax.jit(
             partial(zoo.prefill_fn, cfg=cfg, max_len=max_len, perf=perf)
         )
@@ -77,9 +82,23 @@ class ServingEngine:
                 tok = jax.random.categorical(sub, logits).astype(jnp.int32)
         jax.block_until_ready(outs[-1])
         t2 = time.perf_counter()
-        return GenerationResult(
+        result = GenerationResult(
             tokens=jnp.stack(outs, axis=1), prefill_s=t1 - t0, decode_s=t2 - t1
         )
+        if self.metrics is not None:
+            n_batch = int(result.tokens.shape[0])
+            self.metrics.counter("engine_generate_calls").inc()
+            self.metrics.counter("engine_tokens_generated").inc(n_batch * n_new)
+            from repro.obs.metrics import default_latency_edges_ms
+
+            edges = default_latency_edges_ms()
+            self.metrics.histogram("engine_prefill_ms", edges).observe(
+                1000.0 * result.prefill_s
+            )
+            self.metrics.histogram("engine_decode_ms", edges).observe(
+                1000.0 * result.decode_s
+            )
+        return result
 
     @property
     def resident(self) -> bool:
@@ -101,6 +120,9 @@ class ServingEngine:
             if hasattr(leaf, "delete"):
                 leaf.delete()
         self.params = None
+        if self.metrics is not None:
+            self.metrics.counter("engine_releases").inc()
+            self.metrics.gauge("engine_resident").set(0)
 
 
 def bring_up_from_checkpoint(
@@ -109,15 +131,25 @@ def bring_up_from_checkpoint(
     max_len: int,
     perf: PerfConfig = BASELINE,
     warmup_batch: Optional[dict] = None,
+    metrics: Optional[Any] = None,
 ) -> ServingEngine:
     """The 'configuration phase': restore (decompress) weights + build the
     engine (+ optional jit warm-up so infer latency excludes compile)."""
+    t0 = time.perf_counter()
     target = zoo.param_shapes(cfg)
     _, params = manager.restore_latest(target)
     if params is None:
         raise FileNotFoundError(f"no checkpoint in {manager.directory}")
     params = jax.tree.map(jnp.asarray, params)
-    engine = ServingEngine(cfg, params, max_len, perf)
+    engine = ServingEngine(cfg, params, max_len, perf, metrics=metrics)
     if warmup_batch is not None:
         engine.generate(warmup_batch, n_new=1)
+    if metrics is not None:
+        metrics.counter("engine_bring_ups").inc()
+        metrics.gauge("engine_resident").set(1)
+        from repro.obs.metrics import default_latency_edges_ms
+
+        metrics.histogram("engine_bring_up_ms", default_latency_edges_ms()).observe(
+            1000.0 * (time.perf_counter() - t0)
+        )
     return engine

@@ -220,6 +220,13 @@ _BENCH_FIELDS: dict[str, list[tuple[str, tuple[str, ...]]]] = {
     "policy": [
         ("bench_policy_steps_per_s", ("throughput", "rollout", "steps_per_s")),
     ],
+    # the observability CLI records a ledger/trace-*disabled* periodic run in
+    # the fleet layout, so the same floor asserts the plumbing stayed off the
+    # hot path
+    "obs": [
+        ("bench_fleet_devices_per_s",
+         ("throughput", "periodic", "fleet", "devices_per_s")),
+    ],
 }
 
 

@@ -1,0 +1,156 @@
+#!/usr/bin/env python3
+"""BENCH/OBS snapshot comparator (stdlib only — runs in CI without deps).
+
+Takes two or more ``BENCH_*.json`` / ``OBS_*.json`` artifacts (oldest
+first), flattens every numeric leaf to a dot-path, and prints a per-metric
+delta table between the first (baseline) and last (current) snapshot, with
+regressions highlighted.  Direction is inferred from the metric name:
+rates (``*_per_s``, ``speedup*``) are higher-is-better; times and latencies
+(``elapsed_s``, ``*latency*``, ``p50``/``p99``) are lower-is-better;
+anything else is reported as informational only.
+
+Usage::
+
+    python tools/bench_report.py OLD/BENCH_fleet.json NEW/BENCH_fleet.json
+    python tools/bench_report.py A.json B.json --threshold 0.2 --json out.json
+
+Exits non-zero if any directional metric regressed by more than
+``--threshold`` (default 10%).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+
+#: dot-path fragments that are provenance/config, never perf metrics
+_SKIP_FRAGMENTS = ("manifest.", "config.", ".edges", ".counts", "seed")
+
+
+def flatten(obj, prefix: str = "") -> dict[str, float]:
+    """Numeric leaves of a nested dict/list as ``{dot.path: value}``."""
+    out: dict[str, float] = {}
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            out.update(flatten(v, f"{prefix}{k}."))
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            out.update(flatten(v, f"{prefix}{i}."))
+    elif isinstance(obj, bool):
+        pass
+    elif isinstance(obj, (int, float)):
+        path = prefix.rstrip(".")
+        if math.isfinite(obj) and not any(s in path for s in _SKIP_FRAGMENTS):
+            out[path] = float(obj)
+    return out
+
+
+def direction_of(path: str) -> int:
+    """+1 higher-is-better, -1 lower-is-better, 0 informational."""
+    leaf = path.rsplit(".", 1)[-1]
+    if leaf.endswith("_per_s") or leaf.startswith("speedup"):
+        return 1
+    if leaf in ("elapsed_s", "p50", "p99") or "latency" in leaf:
+        return -1
+    return 0
+
+
+def compare(base: dict, cur: dict, threshold: float) -> list[dict]:
+    """Per-metric records between two flattened snapshots."""
+    records = []
+    for path in sorted(set(base) | set(cur)):
+        b, c = base.get(path), cur.get(path)
+        rec = {"metric": path, "baseline": b, "current": c,
+               "direction": direction_of(path)}
+        if b is None or c is None:
+            rec["status"] = "added" if b is None else "removed"
+            rec["delta_frac"] = None
+        else:
+            delta = (c - b) / abs(b) if b else (0.0 if c == b else math.inf)
+            rec["delta_frac"] = delta
+            d = rec["direction"]
+            if d == 0:
+                rec["status"] = "info"
+            elif d * delta < -threshold:
+                rec["status"] = "regression"
+            elif d * delta > threshold:
+                rec["status"] = "improvement"
+            else:
+                rec["status"] = "ok"
+        records.append(rec)
+    return records
+
+
+def _fmt_delta(rec: dict) -> str:
+    if rec["delta_frac"] is None:
+        return rec["status"]
+    if math.isinf(rec["delta_frac"]):
+        return "inf"
+    return f"{100.0 * rec['delta_frac']:+.1f}%"
+
+
+def render(records: list[dict], only_changed: bool) -> str:
+    lines = ["| metric | baseline | current | delta | status |",
+             "|---|---:|---:|---:|---|"]
+    for r in records:
+        if only_changed and r["status"] in ("ok", "info") and not (
+            r["delta_frac"] and abs(r["delta_frac"]) > 1e-12
+        ):
+            continue
+        mark = {"regression": "**REGRESSION**", "improvement": "improvement"}.get(
+            r["status"], r["status"]
+        )
+        fmt = lambda v: "—" if v is None else f"{v:.6g}"  # noqa: E731
+        lines.append(
+            f"| {r['metric']} | {fmt(r['baseline'])} | {fmt(r['current'])} "
+            f"| {_fmt_delta(r)} | {mark} |"
+        )
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("snapshots", nargs="+",
+                    help="two or more BENCH/OBS JSON files, oldest first")
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="regression threshold as a fraction (default 0.10)")
+    ap.add_argument("--all", action="store_true",
+                    help="print unchanged metrics too")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the full comparison records here")
+    args = ap.parse_args(argv)
+    if len(args.snapshots) < 2:
+        ap.error("need at least two snapshots to compare")
+
+    payloads = []
+    for path in args.snapshots:
+        with open(path) as f:
+            payloads.append(json.load(f))
+    kinds = {p.get("kind") for p in payloads}
+    if len(kinds) > 1:
+        print(f"warning: comparing artifacts of different kinds {sorted(map(str, kinds))}",
+              file=sys.stderr)
+
+    records = compare(flatten(payloads[0]), flatten(payloads[-1]), args.threshold)
+    print(f"# bench report: {args.snapshots[0]} -> {args.snapshots[-1]}\n")
+    print(render(records, only_changed=not args.all))
+
+    regressions = [r for r in records if r["status"] == "regression"]
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({
+                "baseline": args.snapshots[0],
+                "current": args.snapshots[-1],
+                "threshold": args.threshold,
+                "n_regressions": len(regressions),
+                "records": records,
+            }, f, indent=2)
+    print(f"\n{len(regressions)} regression(s) past "
+          f"{100 * args.threshold:.0f}% of {sum(1 for r in records if r['direction'])}"
+          " directional metrics")
+    return 1 if regressions else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
