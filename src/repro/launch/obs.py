@@ -118,6 +118,14 @@ def main(argv=None) -> int:
     conservation["fleet_routed"] = rledger.assert_conserves(
         np.asarray(rres.state.energy_mj)
     )
+    # Both ledgers must be aggregated to scalars *before* adding: summing an
+    # (N,)-shaped ledger with a scalar-aggregated one would broadcast the
+    # aggregate onto every device row and count it N times.
+    combined = pledger.aggregate() + rledger.aggregate()
+    conservation["combined"] = combined.assert_conserves(
+        float(np.sum(pres.energy_mj))
+        + float(np.sum(np.asarray(rres.state.energy_mj)))
+    )
     registry = routed_metrics(rres)
     recorder = routed_timeline(rres)
     chrome = recorder.to_chrome()
@@ -144,7 +152,7 @@ def main(argv=None) -> int:
     }
 
     report = run_report(
-        ledger=pledger + rledger.aggregate(),
+        ledger=combined,
         metrics=registry,
         summary={
             "n_steps": n_steps,

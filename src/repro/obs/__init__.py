@@ -34,6 +34,7 @@ from repro.obs.metrics import (
     Histogram,
     MetricsRegistry,
     default_latency_edges_ms,
+    fleet_queue_depth_edges,
     hist_update,
     routed_metrics,
     scan_histogram,
@@ -57,6 +58,7 @@ __all__ = [
     "Histogram",
     "MetricsRegistry",
     "default_latency_edges_ms",
+    "fleet_queue_depth_edges",
     "hist_update",
     "routed_metrics",
     "scan_histogram",

@@ -185,6 +185,14 @@ class EnergyLedger:
 
     def __add__(self, other: "EnergyLedger") -> "EnergyLedger":
         mine, theirs = self.axes(), other.axes()
+        for a in AXES:
+            if mine[a].shape != theirs[a].shape:
+                raise ValueError(
+                    f"cannot add ledgers with mismatched shapes on axis "
+                    f"{a!r}: {mine[a].shape} vs {theirs[a].shape} — "
+                    "broadcasting would multiply-count the smaller ledger; "
+                    "aggregate() both sides first"
+                )
         return EnergyLedger(**{f"{a}_mj": mine[a] + theirs[a] for a in AXES})
 
     # ---- the conservation contract ---------------------------------------------

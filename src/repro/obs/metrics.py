@@ -30,6 +30,7 @@ __all__ = [
     "Histogram",
     "MetricsRegistry",
     "default_latency_edges_ms",
+    "fleet_queue_depth_edges",
     "hist_update",
     "scan_histogram",
     "routed_metrics",
@@ -122,19 +123,26 @@ class Histogram:
         self.counts = self.counts + counts
 
     def percentile(self, q: float) -> Optional[float]:
-        """Bucket-interpolated percentile (None while empty; the open-ended
-        overflow bucket reports its lower edge)."""
+        """Bucket-interpolated percentile (None while empty).
+
+        The two open-ended buckets report their one finite edge — underflow
+        (x ≤ edges[0], which may hold negative observations) returns
+        edges[0], overflow (x > edges[-1]) returns edges[-1] — so no bound
+        is ever invented outside the configured edge range.
+        """
         total = self.total
         if total == 0:
             return None
         target = total * q / 100.0
         cum = np.cumsum(self.counts)
         i = int(np.searchsorted(cum, target, side="left"))
-        lo = float(self.edges[i - 1]) if i > 0 else 0.0
+        if i == 0:
+            return float(self.edges[0])
         if i >= self.edges.size:
             return float(self.edges[-1])
+        lo = float(self.edges[i - 1])
         hi = float(self.edges[i])
-        prev = float(cum[i - 1]) if i > 0 else 0.0
+        prev = float(cum[i - 1])
         frac = (target - prev) / max(float(self.counts[i]), 1.0)
         return lo + (hi - lo) * min(max(frac, 0.0), 1.0)
 
@@ -199,6 +207,25 @@ def default_latency_edges_ms(lo: float = 0.1, hi: float = 100_000.0,
     """Log-spaced latency bucket edges (ms), ``per_decade`` buckets/decade."""
     n = int(round(math.log10(hi / lo) * per_decade)) + 1
     return np.logspace(math.log10(lo), math.log10(hi), n)
+
+
+def fleet_queue_depth_edges(queue_capacity: int, n_devices: int) -> np.ndarray:
+    """Bucket edges for the fleet-total backlog histogram.
+
+    The backlog sums over all devices, so the edges span the fleet-wide
+    capacity ``queue_capacity * n_devices`` — unit-width integer buckets
+    while that stays small, log-spaced integer edges beyond (a 256-device
+    default fleet would otherwise need thousands of linear buckets).
+    """
+    cap_total = int(queue_capacity) * int(n_devices)
+    if cap_total < 1:
+        raise ValueError("fleet queue capacity must be positive")
+    if cap_total <= 128:
+        return np.arange(cap_total + 1, dtype=np.float64)
+    return np.concatenate((
+        [0.0],
+        np.unique(np.round(np.logspace(0.0, math.log10(cap_total), 48))),
+    ))
 
 
 # ---------------------------------------------------------------------------
@@ -280,8 +307,9 @@ def routed_metrics(result, registry: Optional[MetricsRegistry] = None,
     reg.gauge("devices_dead").set(int((~alive).sum()))
     reg.gauge("queued_requests").set(int(np.sum(np.asarray(s.q_len))))
 
-    qcap = int(s.queue_ms.shape[1])
-    qh = reg.histogram("fleet_queue_depth", edges=list(range(qcap + 1)))
+    n_dev, qcap = (int(d) for d in s.queue_ms.shape)
+    qh = reg.histogram("fleet_queue_depth",
+                       edges=fleet_queue_depth_edges(qcap, n_dev))
     qh.observe_many(np.asarray(result.queued_over_time, dtype=np.float64))
 
     if result.latency_ms is not None and result.served_mask is not None:

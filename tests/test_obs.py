@@ -42,6 +42,7 @@ from repro.obs import (
     TraceRecorder,
     axis_of_phase,
     default_latency_edges_ms,
+    fleet_queue_depth_edges,
     ledger_from_rollout,
     render_markdown,
     routed_metrics,
@@ -113,6 +114,15 @@ class TestLedgerUnit:
         assert total.configure_mj == 3.0
         assert total.idle_mj == 1.0
         assert total.total_mj == 11.0
+
+    def test_add_rejects_shape_mismatch(self):
+        # adding a per-device (N,) ledger to a scalar aggregate would
+        # broadcast the aggregate onto every row and count it N times
+        per_dev = EnergyLedger.from_axes(compute=np.array([1.0, 2.0, 3.0]))
+        agg = EnergyLedger.from_axes(compute=10.0)
+        with pytest.raises(ValueError, match="aggregate"):
+            per_dev + agg
+        (per_dev.aggregate() + agg).assert_conserves(16.0)
 
     def test_conservation_error_normalization(self):
         # sub-unit totals use an absolute denominator of 1 (no false alarms)
@@ -492,6 +502,40 @@ class TestMetrics:
         assert h.percentile(99) == pytest.approx(99.0, rel=0.05)
         assert Histogram("empty", edges=[1.0]).percentile(50) is None
 
+    def test_percentile_open_ended_buckets_report_finite_edge(self):
+        # underflow may hold negative observations: report edges[0], never
+        # a value interpolated from an invented 0.0 lower bound
+        h = Histogram("signed", edges=[-1.0, 1.0])
+        h.observe_many([-5.0, -3.0, -2.0])
+        assert h.percentile(50) == -1.0
+        over = Histogram("over", edges=[1.0])
+        over.observe_many([10.0, 20.0])
+        assert over.percentile(99) == 1.0
+
+    def test_fleet_queue_depth_edges_helper(self):
+        small = fleet_queue_depth_edges(4, 3)  # 12 <= 128: unit-width buckets
+        np.testing.assert_array_equal(small, np.arange(13.0))
+        big = fleet_queue_depth_edges(16, 256)  # log-spaced past 128
+        assert big[0] == 0.0 and big[-1] == 16 * 256
+        assert np.all(np.diff(big) > 0)
+        with pytest.raises(ValueError):
+            fleet_queue_depth_edges(0, 4)
+
+    def test_fleet_queue_depth_spans_fleet_capacity(self):
+        # fleet-total backlog across N devices must not saturate at one
+        # device's queue capacity
+        n_dev, qcap = 12, 4
+        params = uniform_fleet(n_dev, strategies=("idle_waiting",),
+                               request_period_ms=40.0,
+                               powerup_overhead_mj=CAL)
+        counts = np.full(10, n_dev, dtype=np.int32)
+        res = run_routed(params, counts, 40.0, router="round_robin",
+                         queue_capacity=qcap)
+        d = routed_metrics(res).to_dict()["fleet_queue_depth"]
+        assert d["edges"][-1] == qcap * n_dev
+        assert d["total"] == np.asarray(res.queued_over_time).size
+        assert d["counts"][-1] == 0  # backlog can never exceed fleet capacity
+
     def test_routed_metrics_match_state(self):
         params = uniform_fleet(6, strategies=("on_off", "idle_waiting"),
                                request_period_ms=40.0,
@@ -602,6 +646,18 @@ class TestBenchReport:
         assert "throughput.periodic.fleet.devices_per_s" in flat
         assert not any(k.startswith(("manifest", "config")) for k in flat)
 
+    def test_flatten_skips_segments_not_substrings(self):
+        flat = bench_report.flatten({
+            "config": {"seed": 3},
+            "throughput": {"seeded_runs_per_s": 5.0},
+            "metrics": {"lat": {"edges": [1.0, 2.0], "counts": [0, 1],
+                                "p50": 1.5}},
+        })
+        assert flat["throughput.seeded_runs_per_s"] == 5.0  # substring "seed"
+        assert "config.seed" not in flat
+        assert "metrics.lat.p50" in flat
+        assert not any(k.endswith((".edges.0", ".counts.0")) for k in flat)
+
     def test_direction_heuristics(self):
         assert bench_report.direction_of("a.devices_per_s") == 1
         assert bench_report.direction_of("x.speedup_devices_per_s") == 1
@@ -653,3 +709,28 @@ class TestBenchReport:
         assert [r["ok"] for r in recs] == [True]
         recs = check_bench_json({"kind": "obs"}, scale=1.0)
         assert recs[0]["ok"] is False and "missing field" in recs[0]["error"]
+
+
+# ---------------------------------------------------------------------------
+# End-to-end CLI: combined periodic+routed ledger must conserve
+# ---------------------------------------------------------------------------
+class TestObsCLI:
+    def test_report_combined_ledger_conserves(self, tmp_path):
+        from repro.launch import obs
+
+        out = tmp_path / "OBS_report.json"
+        trace = tmp_path / "OBS_trace.json"
+        rc = obs.main([
+            "--devices", "8", "--horizon", "0.4",
+            "--out", str(out), "--trace-out", str(trace),
+        ])
+        assert rc == 0
+        report = json.loads(out.read_text())
+        # the report's aggregated ledger is the sum of the two paths' totals
+        # (an (N,)-per-device + scalar-aggregate mix would count one path's
+        # energy N times); the CLI self-check must cover the combined ledger
+        expected = (report["summary"]["periodic"]["energy_total_mj"]
+                    + report["summary"]["routed"]["energy_total_mj"])
+        assert report["ledger"]["total_mj"] == pytest.approx(expected, rel=RTOL)
+        assert report["conservation"]["combined"] <= RTOL
+        assert validate_chrome_trace(json.loads(trace.read_text())) == []

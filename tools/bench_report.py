@@ -24,8 +24,10 @@ import json
 import math
 import sys
 
-#: dot-path fragments that are provenance/config, never perf metrics
-_SKIP_FRAGMENTS = ("manifest.", "config.", ".edges", ".counts", "seed")
+#: dot-path segments that are provenance/config, never perf metrics;
+#: matched against whole path segments so e.g. a ``seeded_runs_per_s``
+#: metric is not silently dropped just for containing "seed"
+_SKIP_SEGMENTS = frozenset({"manifest", "config", "edges", "counts", "seed"})
 
 
 def flatten(obj, prefix: str = "") -> dict[str, float]:
@@ -41,7 +43,7 @@ def flatten(obj, prefix: str = "") -> dict[str, float]:
         pass
     elif isinstance(obj, (int, float)):
         path = prefix.rstrip(".")
-        if math.isfinite(obj) and not any(s in path for s in _SKIP_FRAGMENTS):
+        if math.isfinite(obj) and _SKIP_SEGMENTS.isdisjoint(path.split(".")):
             out[path] = float(obj)
     return out
 
