@@ -170,10 +170,22 @@ def constrain(x: jax.Array, axes: Sequence[Logical]) -> jax.Array:
 
 
 def axis_size(logical: str, mesh: Optional[Mesh] = None) -> int:
-    """Product of mesh-axis sizes a logical axis maps onto (1 if unmapped)."""
+    """Product of mesh-axis sizes a logical axis maps onto.
+
+    Requires an active mesh — either passed explicitly or installed via
+    :func:`use_sharding`.  A missing mesh raises immediately (naming the
+    logical axis) instead of silently answering 1: every caller of
+    ``axis_size``/``divisible`` is computing a shard count or a padding
+    amount, and a silent 1 would turn a forgotten ``use_sharding`` block
+    into wrong padding far from the root cause.
+    """
     mesh = mesh if mesh is not None else current_mesh()
     if mesh is None:
-        return 1
+        raise ValueError(
+            f"axis_size({logical!r}) needs an active mesh: none was passed "
+            "and no mesh is installed — wrap the call in "
+            "use_sharding(mesh, rules) or pass mesh= explicitly"
+        )
     phys = current_rules().get(logical)
     if phys is None:
         return 1
@@ -187,4 +199,15 @@ def axis_size(logical: str, mesh: Optional[Mesh] = None) -> int:
 
 
 def divisible(dim: int, logical: str, mesh: Optional[Mesh] = None) -> bool:
+    """Whether ``dim`` divides evenly over ``logical``'s shard count.
+
+    Like :func:`axis_size`, raises a clear error naming the logical axis
+    when called with no active mesh (regression-tested in
+    ``tests/test_data_and_sharding.py``)."""
+    if mesh is None and current_mesh() is None:
+        raise ValueError(
+            f"divisible(dim={dim}, logical={logical!r}) needs an active "
+            "mesh: none was passed and no mesh is installed — wrap the "
+            "call in use_sharding(mesh, rules) or pass mesh= explicitly"
+        )
     return dim % axis_size(logical, mesh) == 0

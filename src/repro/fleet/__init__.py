@@ -52,7 +52,14 @@ from repro.fleet.state import (
     FleetState,
     uniform_fleet,
 )
+from repro.fleet.shard import (
+    ShardedPeriodicResult,
+    fleet_mesh,
+    run_periodic_ensemble_sharded,
+    run_periodic_sharded,
+)
 from repro.fleet.step import (
+    INT32_STEP_LIMIT,
     PeriodicFleetResult,
     RoutedFleetResult,
     run_periodic,
@@ -60,8 +67,11 @@ from repro.fleet.step import (
 )
 
 __all__ = [
+    "INT32_STEP_LIMIT",
     "ROUTER_CODES",
     "STRATEGY_CODES",
+    "ShardedPeriodicResult",
+    "fleet_mesh",
     "DeviceSpec",
     "FleetParams",
     "FleetState",
@@ -74,6 +84,8 @@ __all__ = [
     "routed_summary",
     "route_counts",
     "run_periodic",
+    "run_periodic_ensemble_sharded",
+    "run_periodic_sharded",
     "run_routed",
     "uniform_fleet",
 ]

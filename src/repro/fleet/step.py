@@ -50,6 +50,7 @@ from repro.fleet.router import ROUTER_CODES, route_counts
 from repro.fleet.state import FleetParams, FleetState
 
 __all__ = [
+    "INT32_STEP_LIMIT",
     "PeriodicFleetResult",
     "RoutedFleetResult",
     "run_periodic",
@@ -58,6 +59,21 @@ __all__ = [
 
 #: simulate_trace's admission epsilon (relative to max(1, cost)).
 _TRACE_EPS = 1e-9
+
+#: Capacity of the int32 per-device step counter the periodic scans carry
+#: (see ``repro.fleet.dtypes`` for the full carry-dtype audit).  Guarded
+#: explicitly at every entry point rather than silently wrapping.
+INT32_STEP_LIMIT = 2**31 - 1
+
+
+def _check_step_count(n_steps: int, where: str) -> None:
+    if n_steps > INT32_STEP_LIMIT:
+        raise OverflowError(
+            f"{where}: n_steps={n_steps} exceeds the int32 step-counter "
+            f"capacity ({INT32_STEP_LIMIT}); the scan carries int32 "
+            "admission counters (repro.fleet.dtypes) — split the horizon "
+            "or widen the carry deliberately"
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -102,10 +118,22 @@ class PeriodicFleetResult:
         )
 
 
-def _periodic_scan(params: FleetParams, n_steps: int):
-    eps = em.FLOOR_EPS
+def _periodic_limit(params: FleetParams):
+    """Per-device admission limit: budget + FLOOR_EPS of one nominal period
+    (the scalar ``simulate(mode="step")`` boundary rule)."""
     per_period = params.e_item_mj + params.e_idle_mj   # e_idle = 0 for On-Off
-    limit = params.e_budget_mj + eps * per_period
+    return params.e_budget_mj + em.FLOOR_EPS * per_period
+
+
+def _periodic_body(params: FleetParams, limit):
+    """The one periodic admission step — shared verbatim by the unsharded
+    scan below and every per-shard scan in :mod:`repro.fleet.shard`, so
+    sharded results are bit-identical by construction.
+
+    Carry: ``(n int32, alive bool)``; per-step output: the fleet-local
+    admitted count as int32 (integer sums are associative, so per-shard
+    partial sums + a psum reproduce the global ``jnp.sum`` exactly).
+    """
 
     def body(carry, _):
         n, alive = carry
@@ -119,9 +147,39 @@ def _periodic_scan(params: FleetParams, n_steps: int):
         n = jnp.where(admit, n + 1, n)
         return (n, admit), jnp.sum(admit).astype(jnp.int32)
 
-    n0 = jnp.zeros(params.period_ms.shape, dtype=jnp.int64)
+    return body
+
+
+def _periodic_carry0(params: FleetParams):
+    n0 = jnp.zeros(params.period_ms.shape, dtype=jnp.int32)
     alive0 = jnp.ones(params.period_ms.shape, dtype=bool)
-    (n, alive), alive_ts = lax.scan(body, (n0, alive0), None, length=n_steps)
+    return n0, alive0
+
+
+def _periodic_final(params: FleetParams, n):
+    """Final energies/lifetimes re-derived eagerly from the admitted counts —
+    op-for-op the scalar fast path (``onoff_cumulative_energy_mj`` /
+    ``idlewait_cumulative_energy_mj``), outside any jitted scan so XLA
+    fusion cannot perturb them.  Shared with the sharded runner."""
+    nf = n.astype(jnp.float64)
+    energy = jnp.where(
+        params.is_onoff,
+        nf * params.e_item_mj,
+        jnp.where(
+            n > 0,
+            params.e_init_mj + nf * params.e_item_mj + (nf - 1.0) * params.e_idle_mj,
+            0.0,
+        ),
+    )
+    lifetime = nf * params.period_ms
+    return energy, lifetime
+
+
+def _periodic_scan(params: FleetParams, n_steps: int):
+    body = _periodic_body(params, _periodic_limit(params))
+    (n, alive), alive_ts = lax.scan(
+        body, _periodic_carry0(params), None, length=n_steps
+    )
     return n, alive, alive_ts
 
 
@@ -139,26 +197,15 @@ def run_periodic(params: FleetParams, n_steps: int, jit: bool = True) -> Periodi
     """
     if n_steps < 0:
         raise ValueError(f"n_steps must be non-negative, got {n_steps}")
+    _check_step_count(n_steps, "run_periodic")
     with enable_x64():
         fn = _periodic_scan_jit if jit else _periodic_scan
         n, alive, alive_ts = fn(params, n_steps)
-        # Final energies re-derived eagerly — op-for-op the scalar fast path:
-        # onoff_cumulative_energy_mj / idlewait_cumulative_energy_mj.
-        nf = n.astype(jnp.float64)
-        energy = jnp.where(
-            params.is_onoff,
-            nf * params.e_item_mj,
-            jnp.where(
-                n > 0,
-                params.e_init_mj + nf * params.e_item_mj + (nf - 1.0) * params.e_idle_mj,
-                0.0,
-            ),
-        )
-        lifetime = nf * params.period_ms
+        energy, lifetime = _periodic_final(params, n)
     return PeriodicFleetResult(
         params=params,
         n_steps=n_steps,
-        n_items=np.asarray(n),
+        n_items=np.asarray(n).astype(np.int64),
         energy_mj=np.asarray(energy),
         lifetime_ms=np.asarray(lifetime),
         alive=np.asarray(alive),

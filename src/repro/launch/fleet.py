@@ -220,6 +220,89 @@ def _oracle_self_check(args, max_steps: int) -> dict:
     return out
 
 
+def _sharded_acceptance(args, mesh) -> dict:
+    """Full-budget lifetime scan at ``--acceptance-devices`` scale.
+
+    Every device gets the small ``--acceptance-budget-j`` budget, the step
+    cap is the per-device admission bound (rounded up to a whole number of
+    4096-step chunks so exactly one chunk shape compiles), and the chunked
+    kernel's early exit stops as soon as the whole fleet is dead — so the
+    scan runs each device to budget exhaustion, never to an arbitrary
+    horizon.  Records throughput plus the per-device and aggregated ledger
+    conservation errors."""
+    import numpy as np
+
+    from repro.core import energy_model as em
+    from repro.core.phases import paper_lstm_item
+    from repro.core.strategies import IdlePowerMethod
+    from repro.fleet import run_periodic_sharded, uniform_fleet
+
+    n_dev = args.acceptance_devices
+    strategies = (
+        ("on_off", "idle_waiting", "adaptive")
+        if args.strategy == "mix"
+        else (args.strategy,)
+    )
+    params = uniform_fleet(
+        n_dev,
+        item=paper_lstm_item(),
+        strategies=strategies,
+        method=IdlePowerMethod(args.method),
+        request_period_ms=args.period_ms,
+        e_budget_mj=args.acceptance_budget_j * 1000.0,
+        powerup_overhead_mj=powerup_overhead_mj(args),
+    )
+    # per-device admission bound: on_off spends e_item per step, the others
+    # e_item + e_idle past the first config — the max over devices (plus the
+    # FLOOR_EPS slack run_periodic grants) caps the scan exactly
+    limit = np.asarray(
+        params.e_budget_mj + em.FLOOR_EPS * (params.e_item_mj + params.e_idle_mj)
+    )
+    per = np.where(
+        np.asarray(params.is_onoff),
+        np.asarray(params.e_item_mj),
+        np.asarray(params.e_item_mj) + np.asarray(params.e_idle_mj),
+    )
+    bound = int(np.ceil(np.max((limit + np.asarray(params.e_idle_mj)) / per))) + 2
+    step_chunk = 4096
+    n_cap = -(-bound // step_chunk) * step_chunk
+
+    t0 = time.perf_counter()
+    res = run_periodic_sharded(params, n_cap, mesh=mesh, step_chunk=step_chunk)
+    elapsed = time.perf_counter() - t0
+
+    from repro.obs.ledger import AXES
+
+    led = res.ledger()
+    totals = sum(np.asarray(getattr(led, f"{ax}_mj")) for ax in AXES)
+    denom = np.maximum(np.abs(res.energy_mj), 1e-300)
+    per_device_err = float(np.max(np.abs(totals - res.energy_mj) / denom))
+    agg = led.aggregate()
+    agg_total = float(sum(getattr(agg, f"{ax}_mj") for ax in AXES))
+    fleet_total = float(res.energy_mj.sum())
+    agg_err = abs(agg_total - fleet_total) / max(abs(fleet_total), 1e-300)
+
+    return {
+        "devices": n_dev,
+        "mesh": f"{mesh.devices.shape[0]}x{mesh.devices.shape[1]}",
+        "n_shards": res.n_shards,
+        "budget_j": args.acceptance_budget_j,
+        "n_steps_cap": n_cap,
+        "steps_executed": res.steps_executed,
+        "all_budget_exhausted": bool(~res.alive.any()),
+        "total_items": int(res.n_items.sum()),
+        "elapsed_s": round(elapsed, 3),
+        "devices_per_s": round(n_dev / elapsed, 1) if elapsed > 0 else None,
+        "device_steps_per_s": round(n_dev * res.steps_executed / elapsed, 1)
+        if elapsed > 0 else None,
+        "ledger_conservation": {
+            "per_device_max_rel_err": per_device_err,
+            "aggregate_rel_err": agg_err,
+            "within_1e-9": bool(per_device_err <= 1e-9 and agg_err <= 1e-9),
+        },
+    }
+
+
 def main(argv=None) -> int:
     ap = make_parser(
         prog="python -m repro.launch.fleet",
@@ -268,6 +351,19 @@ def main(argv=None) -> int:
                          "0 = exact duty-cycle limit)")
     ap.add_argument("--baseline-devices", type=int, default=None,
                     help="devices in the looped baseline (default min(N, 64))")
+    ap.add_argument("--mesh", default="1",
+                    help="device mesh for the sharded periodic kernel: 'F', "
+                         "'FxS', or 'auto' (all host devices on the fleet "
+                         "axis).  On CPU CI, fake devices come from "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=N")
+    ap.add_argument("--acceptance-devices", type=int, default=None,
+                    help="run the sharded full-budget lifetime acceptance "
+                         "scan at this fleet size (e.g. 1000000) and record "
+                         "it under 'sharded_acceptance'")
+    ap.add_argument("--acceptance-budget-j", type=float, default=2.0,
+                    help="per-device budget (J) for the acceptance scan — "
+                         "small enough that every device dies within the "
+                         "horizon (full-budget lifetime)")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run: tiny baseline + self-check caps")
     args = ap.parse_args(argv)
@@ -337,10 +433,11 @@ def main(argv=None) -> int:
     n_steps_p = max(1, int(math.ceil(horizon_ms / args.period_ms)))
     if args.mode == "periodic":
         periodic_elapsed = fleet_elapsed
+        periodic_result = result
     else:
         run_periodic(params, n_steps_p)     # warm-up
         t0 = time.perf_counter()
-        run_periodic(params, n_steps_p)
+        periodic_result = run_periodic(params, n_steps_p)
         periodic_elapsed = time.perf_counter() - t0
 
     fleet_tp = _tp(periodic_elapsed, args.devices, n_steps_p)
@@ -383,6 +480,39 @@ def main(argv=None) -> int:
                 rfleet_tp["devices_per_s"] / rbase_tp["devices_per_s"], 1
             ) if rbase_tp["devices_per_s"] else None,
         }
+
+    # ---- sharded periodic kernel (always emitted; --mesh 1 collapses to the
+    # unsharded semantics, so the bit-identity self-check is meaningful on a
+    # single-device host too) --------------------------------------------------
+    from repro.fleet import fleet_mesh, run_periodic_sharded
+    from repro.fleet.shard import parse_mesh_spec
+
+    mesh_f, mesh_s = parse_mesh_spec(args.mesh)
+    mesh = fleet_mesh(mesh_f, mesh_s)
+    run_periodic_sharded(params, n_steps_p, mesh=mesh)   # warm-up: compile once
+    t0 = time.perf_counter()
+    sharded_result = run_periodic_sharded(params, n_steps_p, mesh=mesh)
+    sharded_elapsed = time.perf_counter() - t0
+    bit_identical = all(
+        np.array_equal(getattr(periodic_result, f), getattr(sharded_result, f))
+        for f in ("n_items", "energy_mj", "lifetime_ms", "alive",
+                  "alive_over_time")
+    )
+    payload["throughput"]["sharded"] = {
+        "mesh": f"{mesh_f}x{mesh_s}",
+        "n_shards": sharded_result.n_shards,
+        "n_padding": sharded_result.n_padding,
+        "fleet": _tp(sharded_elapsed, args.devices, n_steps_p),
+        "bit_identical_to_unsharded": bool(bit_identical),
+    }
+    if not bit_identical:
+        raise SystemExit(
+            "sharded periodic kernel diverged from the unsharded reference "
+            f"on mesh {mesh_f}x{mesh_s} — refusing to emit the artifact"
+        )
+
+    if args.acceptance_devices:
+        payload["sharded_acceptance"] = _sharded_acceptance(args, mesh)
 
     payload["oracle_self_check"] = _oracle_self_check(
         args, max_steps=2_000 if args.smoke else 6_000_000

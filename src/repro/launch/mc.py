@@ -198,13 +198,20 @@ def _section_ensemble(args) -> dict:
     from repro.fleet import run_periodic
     from repro.mc import run_periodic_ensemble
 
+    mesh = None
+    if args.mesh != "1":
+        from repro.fleet.shard import fleet_mesh, parse_mesh_spec
+
+        mesh = fleet_mesh(*parse_mesh_spec(args.mesh))
+
     params = _build_params(args, args.devices)
     process = _make_process(args)
     ens = run_periodic_ensemble(
-        params, process, args.steps, args.seeds, seed=args.seed
+        params, process, args.steps, args.seeds, seed=args.seed, mesh=mesh
     )
     out = {
         "process": process.name,
+        "mesh": args.mesh,
         "jitter": args.jitter if args.process == "jittered" else None,
         "n_seeds": ens.n_seeds,
         "n_devices": ens.n_devices,
@@ -412,6 +419,12 @@ def main(argv=None) -> int:
                     help="routed tick for the latency section")
     ap.add_argument("--latency-horizon-s", type=float, default=4.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", default="1",
+                    help="('fleet', 'seed') device mesh for the ensemble "
+                         "section: 'F', 'FxS', or 'auto' — results are "
+                         "bit-identical to --mesh 1 (see docs/fleet_sim.md); "
+                         "CPU fake devices via "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=N")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run: fewer seeds/steps/resamples")
     args = ap.parse_args(argv)

@@ -166,20 +166,12 @@ class PeriodicEnsembleResult:
         return self.params.n_devices
 
 
-def _periodic_ens_scan(params: FleetParams, limit, gaps_prev, gaps_next):
-    """One seed's fleet through the gap-driven admission scan.
-
-    ``gaps_prev[k]`` is the realized gap *preceding* request k+1 (0 for the
-    first request, which arrives at t = 0: ``max(0 − t_exec, 0)`` charges it
-    no idle, and the E_init it owes is pre-loaded into the energy carry);
-    ``gaps_next[k]`` is the gap *following* it — the period the request
-    occupies, so Eq. 4's ``lifetime = Σ gaps of admitted requests`` reduces
-    to ``n · T_req`` exactly in the deterministic limit.
-
-    Returned energies include the pre-loaded E_init even for devices that
-    admitted nothing; :func:`periodic_ensemble` zeroes those (the oracle's
-    ``n = 0 → energy 0`` convention).
-    """
+def _ens_body(params: FleetParams, limit):
+    """The one gap-driven admission step — shared by the unsharded vmapped
+    scan and the per-shard scans :mod:`repro.fleet.shard` runs, so sharded
+    ensembles are bit-identical by construction.  Carry:
+    ``(n int32, alive bool, cum f64, life f64, idle f64)`` — the audited
+    dtype contract of :mod:`repro.fleet.dtypes`."""
 
     def body(carry, g):
         gp, gn = g
@@ -195,13 +187,17 @@ def _periodic_ens_scan(params: FleetParams, limit, gaps_prev, gaps_next):
         idle_acc = jnp.where(
             admit & ~params.is_onoff, idle_acc + idle_e, idle_acc
         )
-        n = n + admit.astype(jnp.int64)
+        n = n + admit.astype(jnp.int32)
         life = jnp.where(admit, life + gn, life)
         return (n, admit, cum, life, idle_acc), None
 
+    return body
+
+
+def _ens_carry0(params: FleetParams):
     shape = params.period_ms.shape
-    carry0 = (
-        jnp.zeros(shape, dtype=jnp.int64),
+    return (
+        jnp.zeros(shape, dtype=jnp.int32),
         # an infeasible device (period below the strategy's latency) never
         # admits — the same static gate run_periodic applies every step
         jnp.broadcast_to(params.feasible, shape),
@@ -210,8 +206,24 @@ def _periodic_ens_scan(params: FleetParams, limit, gaps_prev, gaps_next):
         jnp.zeros(shape, dtype=jnp.float64),
         jnp.zeros(shape, dtype=jnp.float64),
     )
+
+
+def _periodic_ens_scan(params: FleetParams, limit, gaps_prev, gaps_next):
+    """One seed's fleet through the gap-driven admission scan.
+
+    ``gaps_prev[k]`` is the realized gap *preceding* request k+1 (0 for the
+    first request, which arrives at t = 0: ``max(0 − t_exec, 0)`` charges it
+    no idle, and the E_init it owes is pre-loaded into the energy carry);
+    ``gaps_next[k]`` is the gap *following* it — the period the request
+    occupies, so Eq. 4's ``lifetime = Σ gaps of admitted requests`` reduces
+    to ``n · T_req`` exactly in the deterministic limit.
+
+    Returned energies include the pre-loaded E_init even for devices that
+    admitted nothing; :func:`periodic_ensemble` zeroes those (the oracle's
+    ``n = 0 → energy 0`` convention).
+    """
     (n, alive, cum, life, idle_acc), _ = lax.scan(
-        body, carry0, (gaps_prev, gaps_next)
+        _ens_body(params, limit), _ens_carry0(params), (gaps_prev, gaps_next)
     )
     return n, alive, cum, life, idle_acc
 
@@ -231,6 +243,7 @@ def periodic_ensemble(
     gaps,
     jit: bool = True,
     keep_device_samples: bool = False,
+    mesh=None,
 ) -> PeriodicEnsembleResult:
     """Run S duty-cycle replications from pre-sampled inter-arrival gaps.
 
@@ -241,7 +254,15 @@ def periodic_ensemble(
     the timed engine of the ``launch.mc`` throughput row (stream sampling
     excluded on both sides, the same convention ``launch.fleet`` uses for
     its looped baseline).
+
+    With ``mesh`` (a ``("fleet", "seed")`` mesh from
+    :func:`repro.fleet.shard.fleet_mesh`) the seed and device axes are
+    partitioned over the mesh via ``shard_map`` — every trajectory still
+    runs the identical scan body, so results are bit-identical to the
+    unsharded path; all host-side aggregation below is shared verbatim.
     """
+    from repro.fleet.step import _check_step_count
+
     with enable_x64():
         gaps = jnp.asarray(gaps, dtype=jnp.float64)
         if gaps.ndim != 3 or gaps.shape[2] != params.n_devices:
@@ -250,6 +271,7 @@ def periodic_ensemble(
                 f"got shape {gaps.shape}"
             )
         n_seeds, n_steps = int(gaps.shape[0]), int(gaps.shape[1])
+        _check_step_count(n_steps, "periodic_ensemble")
         # the same admission slack run_periodic grants (FLOOR_EPS of one
         # nominal period), so the deterministic limit shares its boundary rule
         limit = params.e_budget_mj + em.FLOOR_EPS * (params.e_item_mj + params.e_idle_mj)
@@ -258,8 +280,15 @@ def periodic_ensemble(
              gaps[:, :-1, :]],
             axis=1,
         )
-        fn = _periodic_ens_jit if jit else _periodic_ens_vmapped
-        n, alive, cum, life, idle_acc = fn(params, limit, gaps_prev, gaps)
+        if mesh is not None:
+            from repro.fleet.shard import sharded_periodic_ens_scan
+
+            n, alive, cum, life, idle_acc = sharded_periodic_ens_scan(
+                params, limit, gaps_prev, gaps, mesh
+            )
+        else:
+            fn = _periodic_ens_jit if jit else _periodic_ens_vmapped
+            n, alive, cum, life, idle_acc = fn(params, limit, gaps_prev, gaps)
     n = np.asarray(n)
     # the scan pre-loads E_init into the energy carry; a device that admitted
     # nothing spent nothing (the oracle's n = 0 convention)
@@ -368,9 +397,16 @@ def run_periodic_ensemble(
     keep_device_samples: bool = False,
     jit: bool = True,
     scale_to_device_periods: bool = False,
+    mesh=None,
 ) -> PeriodicEnsembleResult:
     """Replicate an N-device duty-cycle fleet over ``n_seeds`` independent
     request streams drawn from ``process``.
+
+    ``mesh`` (optional, from :func:`repro.fleet.shard.fleet_mesh`) shards
+    every chunk's seed/device axes over a JAX device mesh; gap sampling,
+    chunking, and all host-side merging are identical, so sharded results
+    are bit-identical to the unsharded run for the same ``(seed,
+    seed_chunk)``.
 
     Heterogeneous fleets: with ``scale_to_device_periods=True`` every
     device's sampled gaps are rescaled by ``params.period_ms[d] /
@@ -401,6 +437,9 @@ def run_periodic_ensemble(
         raise ValueError(f"n_seeds must be positive, got {n_seeds}")
     if n_steps <= 0:
         raise ValueError(f"n_steps must be positive, got {n_steps}")
+    from repro.fleet.step import _check_step_count
+
+    _check_step_count(n_steps, "run_periodic_ensemble")
     if seed_chunk is None:
         # default: bound the live gap buffer near 16M float64 entries
         seed_chunk = max(1, min(n_seeds, 16_000_000 // max(1, n_steps * params.n_devices)))
@@ -430,7 +469,8 @@ def run_periodic_ensemble(
                 gaps = gaps * period_scale[None, None, :]
         parts.append(
             periodic_ensemble(
-                params, gaps, jit=jit, keep_device_samples=keep_device_samples
+                params, gaps, jit=jit,
+                keep_device_samples=keep_device_samples, mesh=mesh,
             )
         )
         done += chunk

@@ -38,6 +38,7 @@ __all__ = [
     "machine_scale",
     "measure_scan_rate",
     "measure_periodic_fleet",
+    "measure_periodic_fleet_sharded",
     "measure_mc_seeds",
     "measure_batch_sweep",
     "check",
@@ -69,12 +70,22 @@ REFERENCES: dict[str, PerfReference] = {
     for ref in (
         # in-process probes (tests/test_perf_regression.py, slow-marked)
         PerfReference("periodic_fleet", 800_000.0, unit="devices/s"),
+        # the sharded kernel on a 1x1 mesh must hold the *same* floor as the
+        # unsharded scan — shard_map plumbing, padding, and the chunked
+        # donated loop are required to cost nothing per device
+        PerfReference("periodic_fleet_sharded", 800_000.0, unit="devices/s"),
         PerfReference("mc_seeds", 10_000.0, unit="seeds/s"),
         PerfReference("batch_sweep", 700.0, unit="pts/s"),
         # artifact fields (BENCH_*.json) — the recorded rate varies with run
         # size (smoke vs full), so each reference pins the *highest* observed
         # configuration and the floor fraction is set to clear the lowest
         PerfReference("bench_fleet_devices_per_s", 100_000.0, unit="devices/s"),
+        # the CI smoke runs this on a 2x2 fake-device mesh at 256 devices,
+        # where per-chunk shard_map dispatch (not the scan) dominates — and
+        # dispatch cost doesn't track the scan-rate calibration, so the
+        # floor fraction is looser than the unsharded reference's
+        PerfReference("bench_fleet_sharded_devices_per_s", 100_000.0,
+                      floor_frac=0.1, unit="devices/s"),
         PerfReference("bench_mc_seeds_per_s", 25_000.0, floor_frac=0.1,
                       unit="seeds/s"),
         PerfReference("bench_costs_pts_per_s", 1_000.0, unit="pts/s"),
@@ -149,6 +160,24 @@ def measure_periodic_fleet(n_devices: int = 1024, n_steps: int = 200) -> float:
     return n_devices / (time.perf_counter() - t0)
 
 
+def measure_periodic_fleet_sharded(n_devices: int = 1024, n_steps: int = 200) -> float:
+    """Devices/sec of the sharded periodic scan on a 1×1 mesh — held to the
+    same floor as :func:`measure_periodic_fleet` (sharding must be free)."""
+    from repro.core.phases import paper_lstm_item
+    from repro.fleet import fleet_mesh, run_periodic_sharded, uniform_fleet
+
+    params = uniform_fleet(
+        n_devices, item=paper_lstm_item(),
+        strategies=("on_off", "idle_waiting", "adaptive"),
+        request_period_ms=40.0,
+    )
+    mesh = fleet_mesh(1, 1)
+    run_periodic_sharded(params, n_steps, mesh=mesh)    # compile
+    t0 = time.perf_counter()
+    run_periodic_sharded(params, n_steps, mesh=mesh)
+    return n_devices / (time.perf_counter() - t0)
+
+
 def measure_mc_seeds(n_seeds: int = 256, n_steps: int = 500) -> float:
     """Seeds/sec of the vmapped periodic MC ensemble (3-device mix)."""
     from repro.core.arrivals import JitteredArrivals
@@ -210,6 +239,8 @@ _BENCH_FIELDS: dict[str, list[tuple[str, tuple[str, ...]]]] = {
     "fleet": [
         ("bench_fleet_devices_per_s",
          ("throughput", "periodic", "fleet", "devices_per_s")),
+        ("bench_fleet_sharded_devices_per_s",
+         ("throughput", "sharded", "fleet", "devices_per_s")),
     ],
     "mc": [
         ("bench_mc_seeds_per_s", ("throughput", "ensemble", "seeds_per_s")),

@@ -100,3 +100,40 @@ class TestLogicalSharding:
             devices=np.array(jax.devices() * 4)[:4].reshape(2, 2, 1),
             **kwargs,
         )
+
+
+class TestAxisSizeRequiresMesh:
+    """Regression: axis_size()/divisible() with no active mesh used to
+    silently answer 1 — a forgotten use_sharding block became wrong
+    padding far from the root cause.  They now raise, naming the logical
+    axis and the fix."""
+
+    def test_axis_size_raises_naming_axis(self):
+        with pytest.raises(ValueError, match=r"axis_size\('fleet_device'\)"):
+            shd.axis_size("fleet_device")
+
+    def test_axis_size_error_names_the_fix(self):
+        with pytest.raises(ValueError, match="use_sharding"):
+            shd.axis_size("embed")
+
+    def test_divisible_raises_naming_dim_and_axis(self):
+        with pytest.raises(ValueError, match=r"divisible\(dim=12, logical='vocab'\)"):
+            shd.divisible(12, "vocab")
+
+    def test_explicit_mesh_still_works(self):
+        mesh = compat.abstract_mesh((4, 2), ("data", "model"))
+        assert shd.axis_size("embed", mesh) == 4
+        assert shd.divisible(12, "embed", mesh)
+        assert not shd.divisible(13, "embed", mesh)
+
+    def test_installed_mesh_still_works(self):
+        mesh = compat.abstract_mesh((4, 2), ("data", "model"))
+        with shd.use_sharding(mesh):
+            assert shd.axis_size("vocab") == 2
+            assert shd.divisible(10, "vocab")
+
+    def test_unmapped_axis_with_mesh_is_one(self):
+        # an axis with no rule shards nowhere: size 1, everything divides
+        mesh = compat.abstract_mesh((4, 2), ("data", "model"))
+        assert shd.axis_size("no_such_logical_axis", mesh) == 1
+        assert shd.divisible(7, "no_such_logical_axis", mesh)

@@ -13,12 +13,27 @@ silently relies on, pinned here explicitly:
   router every position receives the identical stream, so results are
   independent of where in the fleet a device sits.
 """
+import os
+import subprocess
+import sys
+import textwrap
+
 import numpy as np
 import pytest
 
-from repro.fleet import DeviceSpec, FleetParams, run_periodic, run_routed, uniform_fleet
+from repro.fleet import (
+    DeviceSpec,
+    FleetParams,
+    fleet_mesh,
+    run_periodic,
+    run_periodic_sharded,
+    run_routed,
+    uniform_fleet,
+)
 from repro.core import energy_model as em
 from repro.core.phases import paper_lstm_item
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
 def mixed_specs(n=9, budget_mj=2500.0):
@@ -80,6 +95,22 @@ class TestJitTransparency:
         for key, va in _routed_arrays(a).items():
             np.testing.assert_array_equal(va, _routed_arrays(b)[key], err_msg=key)
 
+    def test_run_periodic_sharded_bit_identical(self):
+        """The sharded kernel obeys the same jit-transparency contract:
+        the jitted shard_map chunks and the eager per-shard loop agree
+        bit-for-bit (and both with the unsharded reference)."""
+        params = FleetParams.from_specs(mixed_specs())
+        mesh = fleet_mesh(1, 1)
+        ref = run_periodic(params, 4000)
+        a = run_periodic_sharded(params, 4000, mesh=mesh, jit=True)
+        b = run_periodic_sharded(params, 4000, mesh=mesh, jit=False)
+        for f in ("n_items", "energy_mj", "lifetime_ms", "alive",
+                  "alive_over_time"):
+            np.testing.assert_array_equal(getattr(a, f), getattr(b, f),
+                                          err_msg=f)
+            np.testing.assert_array_equal(getattr(ref, f), getattr(a, f),
+                                          err_msg=f)
+
 
 class TestDeviceOrderEquivariance:
     def test_periodic_permutation_equivariant(self):
@@ -127,6 +158,21 @@ class TestDeviceOrderEquivariance:
             np.testing.assert_array_equal(arrays_a[key][perm], arrays_b[key],
                                           err_msg=key)
 
+    def test_periodic_sharded_permutation_equivariant(self):
+        """Sharding carries no hidden coupling either: permuting a
+        heterogeneous fleet permutes the sharded results bit-for-bit."""
+        specs = mixed_specs()
+        perm = np.random.default_rng(6).permutation(len(specs))
+        mesh = fleet_mesh(1, 1)
+        a = run_periodic_sharded(FleetParams.from_specs(specs), 4000, mesh=mesh)
+        b = run_periodic_sharded(
+            FleetParams.from_specs([specs[i] for i in perm]), 4000, mesh=mesh
+        )
+        np.testing.assert_array_equal(a.n_items[perm], b.n_items)
+        np.testing.assert_array_equal(a.energy_mj[perm], b.energy_mj)
+        np.testing.assert_array_equal(a.alive[perm], b.alive)
+        np.testing.assert_array_equal(a.alive_over_time, b.alive_over_time)
+
     def test_homogeneous_fleet_devices_identical_under_balanced_load(self):
         """A homogeneous fleet under balanced traffic: every device's ledger
         is identical, whatever its index."""
@@ -138,3 +184,35 @@ class TestDeviceOrderEquivariance:
         energy = np.asarray(r.state.energy_mj)
         assert np.all(served == served[0])
         assert np.all(energy == energy[0])
+
+
+class TestShardCountInvariance:
+    def test_results_independent_of_mesh_shape(self):
+        """The same fleet scanned on meshes (1,1), (2,1), (4,1) and (2,2)
+        yields byte-identical results — shard count is an execution detail,
+        never a numerical one.  Runs under 8 fake CPU devices in a
+        subprocess (XLA_FLAGS must be set before jax initialises)."""
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        env["PYTHONPATH"] = SRC
+        code = textwrap.dedent("""
+            import numpy as np
+            from repro.fleet import fleet_mesh, run_periodic_sharded, uniform_fleet
+
+            params = uniform_fleet(13, strategies=("idle_waiting", "on_off",
+                                                   "adaptive"),
+                                   e_budget_mj=2500.0)
+            runs = [run_periodic_sharded(params, 500, mesh=fleet_mesh(f, s))
+                    for f, s in ((1, 1), (2, 1), (4, 1), (2, 2))]
+            ref = runs[0]
+            for r in runs[1:]:
+                for fld in ("n_items", "energy_mj", "lifetime_ms", "alive",
+                            "alive_over_time"):
+                    a, b = np.asarray(getattr(ref, fld)), np.asarray(getattr(r, fld))
+                    assert a.tobytes() == b.tobytes(), (r.mesh_shape, fld)
+            print("SHARD_COUNT_INVARIANT_OK")
+        """)
+        out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                             text=True, timeout=560, env=env)
+        assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr[-3000:]}"
+        assert "SHARD_COUNT_INVARIANT_OK" in out.stdout

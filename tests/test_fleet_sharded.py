@@ -1,0 +1,350 @@
+"""Differential suite for the sharded fleet kernels (repro.fleet.shard).
+
+The contract under test is **bit-identity**: for any mesh shape, any
+non-divisible fleet size, and heterogeneous model mixes,
+``run_periodic_sharded`` / ``run_periodic_ensemble_sharded`` must return
+the exact bytes the unsharded kernels return — padding masked out of
+every total — and the per-shard / aggregated EnergyLedgers must satisfy
+the 1e-9 conservation contract.
+
+Multi-device scenarios run in subprocesses with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the main pytest
+process must keep seeing 1 device — see ``tests/test_multidevice.py``);
+the 1×1-mesh collapse and all pure-Python properties run in-process.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import energy_model as em
+from repro.fleet import (
+    DeviceSpec,
+    FleetParams,
+    fleet_mesh,
+    run_periodic,
+    run_periodic_sharded,
+    uniform_fleet,
+)
+from repro.fleet.shard import (
+    pad_fleet,
+    parse_mesh_spec,
+    run_periodic_ensemble_sharded,
+    shard_slices,
+)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+PERIODIC_FIELDS = ("n_items", "energy_mj", "lifetime_ms", "alive", "alive_over_time")
+
+
+def run_py(code: str, timeout=560, n_devices=8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=timeout, env=env,
+    )
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr[-3000:]}"
+    return out.stdout
+
+
+def mixed_params(n=13, budget_mj=2500.0) -> FleetParams:
+    item_specs = []
+    strategies = ("idle_waiting", "on_off", "adaptive")
+    periods = (40.0, 60.0, 90.0)
+    from repro.core.phases import paper_lstm_item
+
+    item = paper_lstm_item()
+    for i in range(n):
+        item_specs.append(DeviceSpec(
+            item=item,
+            strategy=strategies[i % 3],
+            request_period_ms=periods[(i // 3) % 3],
+            e_budget_mj=budget_mj,
+            powerup_overhead_mj=em.CALIBRATED_POWERUP_OVERHEAD_MJ,
+        ))
+    return FleetParams.from_specs(item_specs)
+
+
+def assert_periodic_equal(a, b):
+    for f in PERIODIC_FIELDS:
+        np.testing.assert_array_equal(
+            getattr(a, f), getattr(b, f), err_msg=f
+        )
+
+
+# ---------------------------------------------------------------------------
+# In-process: 1x1 collapse, padding, chunking, error paths
+# ---------------------------------------------------------------------------
+class TestOneByOneCollapse:
+    def test_periodic_bit_identical(self):
+        params = mixed_params(9)
+        assert_periodic_equal(
+            run_periodic(params, 400),
+            run_periodic_sharded(params, 400, mesh=fleet_mesh(1, 1)),
+        )
+
+    def test_periodic_n_steps_zero(self):
+        params = mixed_params(5)
+        assert_periodic_equal(
+            run_periodic(params, 0),
+            run_periodic_sharded(params, 0, mesh=fleet_mesh(1, 1)),
+        )
+
+    def test_chunk_boundaries_cannot_perturb(self):
+        """Any step_chunk gives the same bytes (the carry is exact)."""
+        params = mixed_params(7, budget_mj=500.0)
+        ref = run_periodic(params, 300)
+        for chunk in (1, 7, 128, 300, 1000):
+            assert_periodic_equal(
+                ref,
+                run_periodic_sharded(
+                    params, 300, mesh=fleet_mesh(1, 1), step_chunk=chunk
+                ),
+            )
+
+    def test_early_exit_full_budget_lifetime(self):
+        """A horizon far past fleet death early-exits with exact zeros."""
+        params = mixed_params(6, budget_mj=200.0)
+        ref = run_periodic(params, 4000)
+        assert not ref.alive.any(), "test needs a budget the horizon exhausts"
+        sh = run_periodic_sharded(
+            params, 4000, mesh=fleet_mesh(1, 1), step_chunk=64
+        )
+        assert_periodic_equal(ref, sh)
+        assert sh.steps_executed < sh.n_steps
+        assert len(sh.alive_over_time) == sh.n_steps
+
+    def test_ensemble_bit_identical(self):
+        from repro.core.arrivals import JitteredArrivals
+        from repro.mc import run_periodic_ensemble
+
+        params = mixed_params(5, budget_mj=800.0)
+        proc = JitteredArrivals(40.0, 0.2)
+        a = run_periodic_ensemble(params, proc, 120, 7, seed=3)
+        b = run_periodic_ensemble_sharded(
+            params, proc, 120, 7, mesh=fleet_mesh(1, 1), seed=3
+        )
+        np.testing.assert_array_equal(a.total_items, b.total_items)
+        np.testing.assert_array_equal(a.total_energy_mj, b.total_energy_mj)
+        np.testing.assert_array_equal(a.lifetime_ms, b.lifetime_ms)
+        np.testing.assert_array_equal(a.device_items.mean, b.device_items.mean)
+        np.testing.assert_array_equal(a.device_energy_mj.m2, b.device_energy_mj.m2)
+        from repro.obs.ledger import AXES
+
+        for ax in AXES:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(a.ledger, f"{ax}_mj")),
+                np.asarray(getattr(b.ledger, f"{ax}_mj")),
+                err_msg=ax,
+            )
+
+    def test_heterogeneous_model_mix_fleet(self):
+        """Cost-zoo model mix (different periods/energies per device)."""
+        from repro.costs import model_mix_fleet
+
+        params = model_mix_fleet(
+            ["mixtral-8x7b", "mamba2-370m", "paper-lstm-h20"],
+            n_devices=11, strategy="adaptive", e_budget_mj=5000.0,
+        )
+        assert_periodic_equal(
+            run_periodic(params, 250),
+            run_periodic_sharded(params, 250, mesh=fleet_mesh(1, 1)),
+        )
+
+    def test_result_feeds_fleet_metrics_unchanged(self):
+        """ShardedPeriodicResult is a PeriodicFleetResult: summaries work."""
+        from repro.fleet import periodic_summary
+
+        params = mixed_params(9, budget_mj=500.0)
+        a = periodic_summary(run_periodic(params, 300))
+        b = periodic_summary(run_periodic_sharded(params, 300, mesh=fleet_mesh(1, 1)))
+        assert a == b
+
+
+class TestPadding:
+    def test_pad_counts_and_inertness(self):
+        params = mixed_params(9)
+        padded, pad = pad_fleet(params, 4)
+        assert (padded.n_devices, pad) == (12, 3)
+        assert not np.asarray(padded.feasible)[9:].any()
+        assert np.asarray(padded.e_budget_mj)[9:].sum() == 0.0
+        # the padded fleet run unsharded equals the original on every real
+        # device AND on every fleet-wide total (padding masked out exactly)
+        a = run_periodic(params, 400)
+        b = run_periodic(padded, 400)
+        np.testing.assert_array_equal(a.n_items, b.n_items[:9])
+        np.testing.assert_array_equal(a.energy_mj, b.energy_mj[:9])
+        np.testing.assert_array_equal(a.alive_over_time, b.alive_over_time)
+        assert b.n_items[9:].sum() == 0
+        assert b.energy_mj[9:].sum() == 0.0
+
+    def test_pad_noop_when_divisible(self):
+        params = mixed_params(8)
+        padded, pad = pad_fleet(params, 4)
+        assert pad == 0 and padded is params
+
+    def test_shard_slices_cover_real_devices_once(self):
+        for n, k in [(9, 4), (13, 8), (4, 4), (3, 8)]:
+            sls = shard_slices(n, k)
+            assert len(sls) == k
+            idx = np.concatenate([np.arange(s.start, s.stop) for s in sls])
+            np.testing.assert_array_equal(idx, np.arange(n))
+
+    def test_pad_rejects_bad_multiple(self):
+        with pytest.raises(ValueError, match="multiple"):
+            pad_fleet(mixed_params(3), 0)
+
+
+class TestMeshSpec:
+    def test_parse(self):
+        assert parse_mesh_spec("4") == (4, 1)
+        assert parse_mesh_spec("2x2") == (2, 2)
+        assert parse_mesh_spec("auto") == (1, 1)  # single-device host
+
+    @pytest.mark.parametrize("bad", ["", "x", "2x2x2", "axb", "-"])
+    def test_parse_rejects(self, bad):
+        with pytest.raises(ValueError, match="mesh spec"):
+            parse_mesh_spec(bad)
+
+    def test_mesh_too_large_names_the_fix(self):
+        with pytest.raises(ValueError, match="xla_force_host_platform_device_count"):
+            fleet_mesh(64, 2)
+
+    def test_overflow_guard(self):
+        with pytest.raises(OverflowError, match="int32"):
+            run_periodic_sharded(mixed_params(3), 2**31, mesh=fleet_mesh(1, 1))
+
+
+class TestLedgerConservation:
+    def test_per_shard_and_aggregate(self):
+        """Conservation holds per shard slice and after aggregation."""
+        from repro.obs.ledger import AXES, EnergyLedger
+
+        params = mixed_params(13, budget_mj=500.0)
+        res = run_periodic_sharded(params, 600, mesh=fleet_mesh(1, 1))
+        led = res.ledger()
+        led.assert_conserves(res.energy_mj)
+        # per-shard: slice by the block layout pad_fleet/sharding induce
+        for k in (2, 4, 8):
+            shard_sum = None
+            for sl in shard_slices(params.n_devices, k):
+                sub = EnergyLedger(**{
+                    f"{ax}_mj": np.asarray(getattr(led, f"{ax}_mj"))[sl]
+                    for ax in AXES
+                })
+                if res.energy_mj[sl].size:
+                    sub.assert_conserves(res.energy_mj[sl])
+                agg = sub.aggregate()
+                shard_sum = agg if shard_sum is None else shard_sum + agg
+            # summing the per-shard aggregates conserves the fleet total
+            shard_sum.assert_conserves(float(res.energy_mj.sum()))
+
+
+# ---------------------------------------------------------------------------
+# Subprocess: real multi-device meshes (8 fake CPU devices)
+# ---------------------------------------------------------------------------
+def test_mesh_sweep_differential_multidevice():
+    """Sharded ≡ unsharded across mesh shapes {1,2,4}×{1,2} on a
+    non-divisible heterogeneous fleet, with per-shard + aggregated ledger
+    conservation, on 8 fake CPU devices."""
+    run_py("""
+        import numpy as np
+        from repro.core import energy_model as em
+        from repro.core.phases import paper_lstm_item
+        from repro.fleet import (DeviceSpec, FleetParams, fleet_mesh,
+                                 run_periodic, run_periodic_sharded)
+        from repro.fleet.shard import shard_slices
+        from repro.obs.ledger import AXES, EnergyLedger
+
+        item = paper_lstm_item()
+        strategies = ("idle_waiting", "on_off", "adaptive")
+        periods = (40.0, 60.0, 90.0)
+        for n in (8, 13):
+            params = FleetParams.from_specs([
+                DeviceSpec(item=item, strategy=strategies[i % 3],
+                           request_period_ms=periods[(i // 3) % 3],
+                           e_budget_mj=2500.0,
+                           powerup_overhead_mj=em.CALIBRATED_POWERUP_OVERHEAD_MJ)
+                for i in range(n)
+            ])
+            ref = run_periodic(params, 400)
+            for f in (1, 2, 4):
+                for s in (1, 2):
+                    res = run_periodic_sharded(params, 400, mesh=fleet_mesh(f, s))
+                    for fld in ("n_items", "energy_mj", "lifetime_ms",
+                                "alive", "alive_over_time"):
+                        np.testing.assert_array_equal(
+                            getattr(ref, fld), getattr(res, fld),
+                            err_msg=f"N={n} mesh={f}x{s} {fld}")
+                    led = res.ledger()
+                    led.assert_conserves(res.energy_mj)
+                    for sl in shard_slices(n, res.n_shards):
+                        if res.energy_mj[sl].size:
+                            EnergyLedger(**{
+                                f"{ax}_mj": np.asarray(getattr(led, f"{ax}_mj"))[sl]
+                                for ax in AXES
+                            }).assert_conserves(res.energy_mj[sl])
+                    led.aggregate().assert_conserves(float(res.energy_mj.sum()))
+        print("MESH_SWEEP_OK")
+    """)
+
+
+def test_ensemble_sharded_multidevice():
+    """Seed+device sharded MC ensemble ≡ unsharded, incl. Welford moments
+    and the per-seed ledger, across mesh shapes (non-divisible axes)."""
+    run_py("""
+        import numpy as np
+        from repro.core.arrivals import JitteredArrivals
+        from repro.fleet import fleet_mesh, uniform_fleet
+        from repro.fleet.shard import run_periodic_ensemble_sharded
+        from repro.mc import run_periodic_ensemble
+        from repro.obs.ledger import AXES
+
+        params = uniform_fleet(13, strategies=("on_off", "idle_waiting",
+                                               "adaptive"),
+                               e_budget_mj=800.0)
+        proc = JitteredArrivals(40.0, 0.25)
+        ref = run_periodic_ensemble(params, proc, 100, 7, seed=5)
+        for f, s in ((2, 1), (1, 2), (2, 2), (4, 2)):
+            e = run_periodic_ensemble_sharded(params, proc, 100, 7,
+                                              mesh=fleet_mesh(f, s), seed=5)
+            np.testing.assert_array_equal(ref.total_items, e.total_items)
+            np.testing.assert_array_equal(ref.total_energy_mj, e.total_energy_mj)
+            np.testing.assert_array_equal(ref.lifetime_ms, e.lifetime_ms)
+            np.testing.assert_array_equal(ref.device_items.mean, e.device_items.mean)
+            np.testing.assert_array_equal(ref.device_energy_mj.m2, e.device_energy_mj.m2)
+            for ax in AXES:
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(ref.ledger, f"{ax}_mj")),
+                    np.asarray(getattr(e.ledger, f"{ax}_mj")), err_msg=ax)
+            e.ledger.assert_conserves(e.total_energy_mj)
+        print("ENSEMBLE_SWEEP_OK")
+    """)
+
+
+def test_acceptance_4way_mesh_n4096():
+    """The issue's acceptance bar: a 4-way CPU mesh is bit-identical to
+    run_periodic at N=4096."""
+    run_py("""
+        import numpy as np
+        from repro.fleet import (fleet_mesh, run_periodic,
+                                 run_periodic_sharded, uniform_fleet)
+
+        params = uniform_fleet(4096, strategies=("on_off", "idle_waiting",
+                                                 "adaptive"),
+                               e_budget_mj=2500.0)
+        ref = run_periodic(params, 250)
+        res = run_periodic_sharded(params, 250, mesh=fleet_mesh(4, 1))
+        for fld in ("n_items", "energy_mj", "lifetime_ms", "alive",
+                    "alive_over_time"):
+            np.testing.assert_array_equal(getattr(ref, fld), getattr(res, fld),
+                                          err_msg=fld)
+        assert res.n_shards == 4 and res.n_padding == 0
+        print("N4096_4WAY_OK")
+    """, n_devices=4)

@@ -45,16 +45,27 @@ def test_every_reference_is_positive_and_fractional():
 # ---------------------------------------------------------------------------
 # BENCH-JSON parsing on synthetic payloads (fast)
 # ---------------------------------------------------------------------------
-def _fleet_payload(devices_per_s):
-    return {"kind": "fleet", "throughput": {"periodic": {"fleet": {
-        "devices_per_s": devices_per_s}}}}
+def _fleet_payload(devices_per_s, sharded_devices_per_s=None):
+    if sharded_devices_per_s is None:
+        sharded_devices_per_s = devices_per_s
+    return {"kind": "fleet", "throughput": {
+        "periodic": {"fleet": {"devices_per_s": devices_per_s}},
+        "sharded": {"fleet": {"devices_per_s": sharded_devices_per_s}},
+    }}
 
 
 def test_check_bench_json_fleet_pass_and_fail():
     good = pr.check_bench_json(_fleet_payload(1e9), scale=1.0)
-    assert [r["ok"] for r in good] == [True]
+    assert [r["ok"] for r in good] == [True, True]
     bad = pr.check_bench_json(_fleet_payload(1.0), scale=1.0)
-    assert [r["ok"] for r in bad] == [False]
+    assert [r["ok"] for r in bad] == [False, False]
+
+
+def test_check_bench_json_sharded_floor_is_independent():
+    # a fast unsharded run cannot mask a slow sharded kernel
+    recs = pr.check_bench_json(_fleet_payload(1e9, 1.0), scale=1.0)
+    assert [r["ok"] for r in recs] == [True, False]
+    assert recs[1]["name"] == "bench_fleet_sharded_devices_per_s"
 
 
 def test_check_bench_json_mc_and_costs_fields():
@@ -80,9 +91,10 @@ def test_check_bench_json_policy_field():
 
 def test_missing_throughput_field_fails_explicitly():
     recs = pr.check_bench_json({"kind": "fleet"}, scale=1.0)
-    assert len(recs) == 1
-    assert not recs[0]["ok"]
-    assert "missing field" in recs[0]["error"]
+    assert len(recs) == 2
+    for rec in recs:
+        assert not rec["ok"]
+        assert "missing field" in rec["error"]
 
 
 def test_unknown_kind_raises():
@@ -122,6 +134,15 @@ def scale():
 @pytest.mark.slow
 def test_periodic_fleet_throughput(scale):
     rec = pr.check("periodic_fleet", pr.measure_periodic_fleet(), scale)
+    assert rec["ok"], rec
+
+
+@pytest.mark.slow
+def test_periodic_fleet_sharded_throughput(scale):
+    """Sharding must be free: the 1x1-mesh kernel holds the same floor."""
+    rec = pr.check(
+        "periodic_fleet_sharded", pr.measure_periodic_fleet_sharded(), scale
+    )
     assert rec["ok"], rec
 
 
