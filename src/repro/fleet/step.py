@@ -53,6 +53,7 @@ __all__ = [
     "INT32_STEP_LIMIT",
     "PeriodicFleetResult",
     "RoutedFleetResult",
+    "routed_ledger",
     "run_periodic",
     "run_routed",
 ]
@@ -216,6 +217,30 @@ def run_periodic(params: FleetParams, n_steps: int, jit: bool = True) -> Periodi
 # ---------------------------------------------------------------------------
 # Routed kernel
 # ---------------------------------------------------------------------------
+def routed_ledger(params: FleetParams, state: FleetState):
+    """Per-device phase-resolved :class:`repro.obs.ledger.EnergyLedger`
+    (shape ``(N,)`` per axis) for any routed-kernel :class:`FleetState`:
+    configurations split into the pure configure energy and the power-up
+    overhead, idle energy from the scan's own accumulator — axes sum to
+    ``state.energy_mj`` within 1e-9 relative.  Shared by
+    :meth:`RoutedFleetResult.ledger` and the hierarchical control plane
+    (:mod:`repro.control`), which builds rack ledgers from carried states.
+    """
+    from repro.obs.ledger import EnergyLedger
+
+    n_cfg = np.asarray(state.n_configs).astype(np.float64)
+    served = np.asarray(state.n_served).astype(np.float64)
+    ovh = np.asarray(params.e_overhead_mj)
+    cfg_pure = np.asarray(params.e_config_mj) - ovh
+    return EnergyLedger.from_axes(
+        configure=n_cfg * cfg_pure,
+        compute=served * np.asarray(params.e_exec_mj),
+        idle=np.asarray(state.idle_energy_mj),
+        off=np.zeros_like(served),
+        overhead=n_cfg * ovh,
+    )
+
+
 @dataclasses.dataclass(frozen=True)
 class RoutedFleetResult:
     """Final state + per-step trajectories of a routed-traffic run."""
@@ -235,6 +260,7 @@ class RoutedFleetResult:
     released_mask: Optional[np.ndarray] = None   # bool (K, N) — timeout release
     queue_depth: Optional[np.ndarray] = None     # i32 (K, N) — post-tick backlog
     dropped_per_tick: Optional[np.ndarray] = None  # i32 (K, N) — overflow drops
+    start_tick: int = 0           # global tick of this chunk's first step
 
     @property
     def n_served(self) -> np.ndarray:
@@ -246,24 +272,8 @@ class RoutedFleetResult:
 
     def ledger(self):
         """Per-device phase-resolved :class:`repro.obs.ledger.EnergyLedger`
-        (shape ``(N,)`` per axis): configurations split into the pure
-        configure energy and the power-up overhead, idle energy from the
-        scan's own accumulator — axes sum to ``state.energy_mj`` within
-        1e-9 relative."""
-        from repro.obs.ledger import EnergyLedger
-
-        p = self.params
-        n_cfg = np.asarray(self.state.n_configs).astype(np.float64)
-        served = np.asarray(self.state.n_served).astype(np.float64)
-        ovh = np.asarray(p.e_overhead_mj)
-        cfg_pure = np.asarray(p.e_config_mj) - ovh
-        return EnergyLedger.from_axes(
-            configure=n_cfg * cfg_pure,
-            compute=served * np.asarray(p.e_exec_mj),
-            idle=np.asarray(self.state.idle_energy_mj),
-            off=np.zeros_like(served),
-            overhead=n_cfg * ovh,
-        )
+        (shape ``(N,)`` per axis) — see :func:`routed_ledger`."""
+        return routed_ledger(self.params, self.state)
 
     def final_modes(self) -> np.ndarray:
         """Per-device mode codes at horizon end (state.MODE_*): DEAD if the
@@ -271,7 +281,7 @@ class RoutedFleetResult:
         within its timeout, OFF otherwise (never configured or released)."""
         from repro.fleet.state import MODE_BUSY, MODE_DEAD, MODE_IDLE, MODE_OFF
 
-        end_ms = self.dt_ms * self.n_steps
+        end_ms = self.dt_ms * (self.start_tick + self.n_steps)
         alive = np.asarray(self.state.alive)
         resident = np.asarray(self.state.resident)
         completion = np.asarray(self.state.completion_ms)
@@ -419,6 +429,8 @@ def run_routed(
     collect_latency: bool = True,
     collect_events: bool = False,
     jit: bool = True,
+    state0: Optional[FleetState] = None,
+    start_tick: int = 0,
 ) -> RoutedFleetResult:
     """Simulate routed traffic over ``K = len(arrivals)`` ticks of ``dt_ms``.
 
@@ -428,9 +440,22 @@ def run_routed(
     :func:`repro.core.arrivals.bin_arrival_counts`).  Service rate is capped
     at one request per device per tick, so pick ``dt_ms`` at or below the
     per-device inter-arrival scale.
+
+    **Chunked continuation.** Passing ``state0`` (a previous run's
+    ``result.state``) and ``start_tick`` (previous ``start_tick + n_steps``)
+    resumes the global clock mid-stream: the scan's ``now = k * dt_ms``
+    values are the same ones a single full-length run would compute, and the
+    carry is handed over unchanged, so a chain of chunked calls is
+    *bit-identical* to one call over the concatenated arrivals (per-chunk
+    global-drop roll-ups onto device 0 are integer sums, hence exact).  This
+    is the differential spine the hierarchical control plane
+    (:mod:`repro.control`) collapses onto.  When ``state0`` is given the
+    queue capacity is taken from it and ``queue_capacity`` is ignored.
     """
     if dt_ms <= 0:
         raise ValueError(f"dt_ms must be positive, got {dt_ms}")
+    if start_tick < 0:
+        raise ValueError(f"start_tick must be non-negative, got {start_tick}")
     with enable_x64():
         arrivals = jnp.asarray(arrivals)
         if arrivals.ndim == 1:
@@ -450,9 +475,18 @@ def run_routed(
         else:
             raise ValueError(f"arrivals must be (K,) or (K, N), got shape {arrivals.shape}")
         n_steps = int(arrivals.shape[0])
+        _check_step_count(start_tick + n_steps, "run_routed")
         arrivals = arrivals.astype(jnp.int32)
-        steps = jnp.arange(n_steps, dtype=jnp.int64)
-        state0 = FleetState.init(params.n_devices, queue_capacity)
+        steps = jnp.arange(start_tick, start_tick + n_steps, dtype=jnp.int64)
+        if state0 is None:
+            state0 = FleetState.init(params.n_devices, queue_capacity)
+        else:
+            if int(state0.energy_mj.shape[0]) != params.n_devices:
+                raise ValueError(
+                    f"state0 carries {int(state0.energy_mj.shape[0])} devices "
+                    f"for {params.n_devices}-device params"
+                )
+            queue_capacity = state0.queue_capacity
         dt = jnp.asarray(dt_ms, dtype=jnp.float64)
         if jit:
             fn = _routed_scan_fn(code, collect_latency, queue_capacity,
@@ -484,4 +518,5 @@ def run_routed(
         released_mask=np.asarray(ys[-3]) if collect_events else None,
         queue_depth=np.asarray(ys[-2]) if collect_events else None,
         dropped_per_tick=np.asarray(ys[-1]) if collect_events else None,
+        start_tick=start_tick,
     )

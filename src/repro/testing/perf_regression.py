@@ -95,6 +95,13 @@ REFERENCES: dict[str, PerfReference] = {
         # per-gap Python fallback without tripping on batch-size jitter
         PerfReference("bench_policy_steps_per_s", 1_200_000.0, floor_frac=0.1,
                       unit="steps/s"),
+        # hierarchical control plane: device-ticks/sec of the epoch loop.
+        # Per-epoch Python control (routing, autoscaling, fault machinery)
+        # dominates at smoke scale and doesn't track the scan calibration,
+        # so the floor fraction is loose — this flags a lost jit in the
+        # per-rack routed chunks or an accidental per-tick Python loop
+        PerfReference("bench_control_device_ticks_per_s", 40_000.0,
+                      floor_frac=0.1, unit="device-ticks/s"),
     )
 }
 
@@ -257,6 +264,10 @@ _BENCH_FIELDS: dict[str, list[tuple[str, tuple[str, ...]]]] = {
     "obs": [
         ("bench_fleet_devices_per_s",
          ("throughput", "periodic", "fleet", "devices_per_s")),
+    ],
+    "control": [
+        ("bench_control_device_ticks_per_s",
+         ("throughput", "hierarchy", "device_ticks_per_s")),
     ],
 }
 

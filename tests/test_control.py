@@ -1,0 +1,468 @@
+"""Hierarchical control-plane tests (ISSUE 10): the differential spine.
+
+* A 1-region/1-rack hierarchy reproduces flat ``run_routed`` bit-for-bit
+  (counts exactly, energies within 1e-9 — in practice 0.0);
+* a 1-device rack in periodic mode reproduces the scalar ``simulate()``
+  oracle;
+* requests and energy are conserved at every level under property-driven
+  random rack crashes and elastic restarts (through the real heartbeat /
+  ``plan_elastic_mesh`` machinery);
+* the hierarchical ledger roll-up equals the flat per-device sum;
+* autoscaler no-flap: gaps oscillating ±2%/±8% around the rack crossover
+  cause at most one power transition — for the analytical crossover rule
+  AND a ``LearnedTimeoutPolicy`` driving rack power states.
+"""
+import math
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import energy_model as em
+from repro.core.simulator import simulate
+from repro.core.strategies import IdlePowerMethod
+from repro.core.workload import ExperimentSpec, WorkloadSpec
+from repro.core.phases import paper_lstm_item
+from repro.control import (
+    CrossoverAutoscaler,
+    FaultSchedule,
+    PolicyAutoscaler,
+    RackFault,
+    RackSpec,
+    rack_break_even_ms,
+    rack_crossover_ms,
+    rack_idle_power_mw,
+    rack_reconfig_energy_mj,
+    rack_workload_item,
+    run_hierarchy,
+    run_rack_periodic,
+    uniform_topology,
+)
+from repro.control.simulate import pack_split, proportional_split
+from repro.fleet import DeviceSpec, FleetParams
+from repro.fleet.step import run_routed
+
+CAL = em.CALIBRATED_POWERUP_OVERHEAD_MJ
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _release_compile_cache():
+    """The property tests here sweep random topology shapes, so this module
+    compiles far more distinct XLA programs than any other file.  Holding
+    them all resident for the rest of the session pushes the process-wide
+    compiled-code footprint past what the CPU JIT tolerates (later compiles
+    segfault); drop them once the module is done — later files recompile
+    their own shapes from scratch anyway."""
+    yield
+    jax.clear_caches()
+
+STATE_FIELDS = (
+    "energy_mj", "idle_energy_mj", "n_served", "n_configs",
+    "n_released", "n_dropped", "completion_ms", "q_head", "q_len",
+)
+
+
+def _small_topology(**kwargs):
+    defaults = dict(
+        n_regions=1, racks_per_region=2, devices_per_rack=4,
+        request_period_ms=100.0, bringup_ms=100.0, bringup_mj=50.0,
+    )
+    defaults.update(kwargs)
+    return uniform_topology(**defaults)
+
+
+# ---------------------------------------------------------------------------
+# exact integer routing
+# ---------------------------------------------------------------------------
+class TestSplits:
+    def test_single_target_is_identity(self):
+        counts = np.array([0, 3, 7, 1], dtype=np.int64)
+        for split in (proportional_split, pack_split):
+            out, dropped, ptr = split(counts, np.array([5]), ptr=0)
+            assert np.array_equal(out[:, 0], counts)
+            assert not dropped.any() and ptr == 0
+
+    def test_all_zero_weights_drop_everything(self):
+        counts = np.array([2, 5], dtype=np.int64)
+        for split in (proportional_split, pack_split):
+            out, dropped, _ = split(counts, np.array([0, 0]), ptr=0)
+            assert not out.any()
+            assert np.array_equal(dropped, counts)
+
+    def test_pack_fills_in_order(self):
+        out, dropped, _ = pack_split(np.array([5]), np.array([4, 4]))
+        assert out.tolist() == [[4, 1]] and not dropped.any()
+
+    def test_pack_overflow_spills_proportionally(self):
+        # beyond the total per-tick capacity the excess splits by capacity
+        # (device queues absorb it) — nothing is silently dropped
+        out, dropped, _ = pack_split(np.array([12]), np.array([4, 4]))
+        assert out.sum() == 12 and not dropped.any()
+        assert out.tolist() == [[6, 6]]
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        st.lists(st.integers(min_value=0, max_value=40), min_size=1, max_size=12),
+        st.lists(st.integers(min_value=0, max_value=6), min_size=1, max_size=5),
+        st.integers(min_value=0, max_value=7),
+    )
+    def test_both_splits_conserve_every_tick(self, counts, weights, ptr):
+        counts = np.asarray(counts, dtype=np.int64)
+        weights = np.asarray(weights, dtype=np.int64)
+        for split in (proportional_split, pack_split):
+            out, dropped, _ = split(counts, weights, ptr=ptr)
+            assert np.array_equal(out.sum(axis=1) + dropped, counts)
+            if weights.sum() > 0:
+                assert not dropped.any()
+            assert (out <= counts[:, None]).all()
+
+
+# ---------------------------------------------------------------------------
+# the differential spine: each level collapses onto the layer below
+# ---------------------------------------------------------------------------
+class TestCollapse:
+    def test_one_region_one_rack_is_run_routed(self):
+        """1-region/1-rack, no autoscaler, no faults == flat run_routed,
+        bit-for-bit — across epoch boundaries (257 ticks, epochs of 50)."""
+        topo = uniform_topology(1, 1, 8, request_period_ms=120.0)
+        rack = topo.regions[0].racks[0]
+        rng = np.random.default_rng(7)
+        counts = rng.poisson(3.0, size=257).astype(np.int64)
+        res = run_hierarchy(topo, counts, dt_ms=50.0, epoch_ticks=50)
+        ref = run_routed(
+            rack.params, counts, dt_ms=50.0, router=rack.router,
+            queue_capacity=rack.queue_capacity,
+        )
+        state = res.racks[rack.name].state
+        for f in STATE_FIELDS:
+            assert np.array_equal(
+                np.asarray(getattr(ref.state, f)), np.asarray(getattr(state, f))
+            ), f"field {f} diverged"
+        # latency multiset identical (routing order may differ, values not)
+        assert np.array_equal(
+            np.sort(ref.latency_ms[ref.served_mask]), np.sort(res.latency_ms)
+        )
+        # counts exact, energies within 1e-9 at every roll-up level
+        rr = res.racks[rack.name]
+        assert rr.arrived == int(counts.sum())
+        assert rr.served == int(np.sum(np.asarray(ref.state.n_served)))
+        assert res.global_dropped == 0 and not any(res.region_dropped.values())
+        assert abs(res.total_energy_mj - float(np.sum(np.asarray(ref.state.energy_mj)))) <= 1e-9
+        ledgers = (rr.ledger(), res.region_ledger(rack.name[:2]), res.total_ledger())
+        ref_led = ref.ledger().aggregate()
+        for led in ledgers:
+            for axis, val in ref_led.to_dict().items():
+                assert led.to_dict()[axis] == pytest.approx(val, abs=1e-9)
+
+    @pytest.mark.parametrize("strategy", ["on_off", "idle_waiting"])
+    def test_rack_n1_matches_scalar_oracle(self, strategy):
+        """A 1-device rack in periodic duty-cycle mode == the scalar
+        ``simulate()`` oracle — the bottom anchor of the spine."""
+        spec = ExperimentSpec(
+            workload=WorkloadSpec(41.47, 40.0),
+            item=paper_lstm_item(),
+            strategy_kind=strategy,
+            method=IdlePowerMethod.METHOD1_2,
+            powerup_overhead_mj=CAL,
+        )
+        oracle = simulate(spec)
+        rack = RackSpec(
+            name="solo", params=FleetParams.from_specs([DeviceSpec.from_experiment(spec)])
+        )
+        fleet = run_rack_periodic(rack, n_steps=oracle.n_items + 10)
+        assert int(fleet.n_items[0]) == oracle.n_items
+        assert abs(float(fleet.energy_mj[0]) - oracle.energy_used_mj) <= 1e-9
+        assert float(fleet.lifetime_ms[0]) == oracle.lifetime_ms
+
+    def test_epoch_partition_invariance(self):
+        """Without control actions the epoch size is a pure implementation
+        detail: any partition of the tick stream yields identical racks."""
+        topo = _small_topology()
+        rng = np.random.default_rng(3)
+        counts = rng.poisson(2.0, size=96).astype(np.int64)
+        runs = [
+            run_hierarchy(topo, counts, dt_ms=40.0, epoch_ticks=e)
+            for e in (7, 32, 96)
+        ]
+        base = runs[0]
+        for other in runs[1:]:
+            for name in base.racks:
+                a, b = base.racks[name].state, other.racks[name].state
+                for f in STATE_FIELDS:
+                    assert np.array_equal(
+                        np.asarray(getattr(a, f)), np.asarray(getattr(b, f))
+                    ), (name, f)
+
+
+# ---------------------------------------------------------------------------
+# conservation under property-driven faults
+# ---------------------------------------------------------------------------
+class TestConservationUnderFaults:
+    N_TICKS = 96
+
+    def _run(self, n_regions, racks_per_region, devices, fault_list, seed,
+             rack_routing="spread", charge_idle_tail=False):
+        topo = uniform_topology(
+            n_regions, racks_per_region, devices,
+            request_period_ms=80.0, bringup_ms=60.0, bringup_mj=20.0,
+            model_axis=2 if devices % 2 == 0 else 1,
+        )
+        rng = np.random.default_rng(seed)
+        counts = rng.poisson(0.4 * topo.n_devices, size=self.N_TICKS).astype(np.int64)
+        faults = FaultSchedule(tuple(
+            RackFault(
+                rack=topo.racks()[r % topo.n_racks].name,
+                crash_tick=t % self.N_TICKS,
+                lost_devices=lost % (devices + 1),
+            )
+            for (r, t, lost) in fault_list
+        ))
+        res = run_hierarchy(
+            topo, counts, dt_ms=20.0, epoch_ticks=16,
+            autoscaler_factory=CrossoverAutoscaler.for_rack,
+            faults=faults, heartbeat_timeout_s=0.3, jit=False,
+            rack_routing=rack_routing, charge_idle_tail=charge_idle_tail,
+        )
+        return res, counts
+
+    @settings(max_examples=12, deadline=None)
+    @given(
+        st.integers(min_value=1, max_value=2),
+        st.integers(min_value=1, max_value=3),
+        st.integers(min_value=1, max_value=4),
+        st.lists(
+            st.tuples(
+                st.integers(min_value=0, max_value=9),
+                st.integers(min_value=0, max_value=9999),
+                st.integers(min_value=0, max_value=9),
+            ),
+            min_size=0, max_size=4,
+        ),
+        st.integers(min_value=0, max_value=10_000),
+    )
+    def test_random_faults_conserve_requests_and_energy(
+        self, n_regions, racks_per_region, devices, fault_list, seed
+    ):
+        res, counts = self._run(n_regions, racks_per_region, devices, fault_list, seed)
+        # raises on any violated contract; returns the residuals when green
+        c = res.assert_conserves(rtol=1e-9)
+        assert res.arrived == int(counts.sum())
+        assert res.served + res.dropped + res.in_flight == res.arrived
+        assert all(v == 0 for v in c["rack_requests"].values())
+        assert all(v == 0 for v in c["region_requests"].values())
+        # hierarchical ledger roll-up == flat per-device sum (+ rack events)
+        flat = res.flat_device_energy_mj + sum(
+            r.bringup_energy_mj + r.idle_tail_mj for r in res.racks.values()
+        )
+        assert res.total_ledger().conservation_error(flat) <= 1e-9
+
+    @settings(max_examples=6, deadline=None)
+    @given(
+        st.integers(min_value=1, max_value=2),
+        st.integers(min_value=2, max_value=3),
+        st.lists(
+            st.tuples(
+                st.integers(min_value=0, max_value=9),
+                st.integers(min_value=0, max_value=9999),
+                st.integers(min_value=0, max_value=9),
+            ),
+            min_size=0, max_size=3,
+        ),
+        st.integers(min_value=0, max_value=10_000),
+    )
+    def test_pack_routing_with_idle_tail_conserves(
+        self, n_regions, racks_per_region, fault_list, seed
+    ):
+        """The CLI configuration — consolidating routing + lazy-idle
+        close-out — holds the same contracts."""
+        res, counts = self._run(
+            n_regions, racks_per_region, 2, fault_list, seed,
+            rack_routing="pack", charge_idle_tail=True,
+        )
+        res.assert_conserves(rtol=1e-9)
+        assert res.served + res.dropped + res.in_flight == int(counts.sum())
+        # the close-out only ever adds energy, and lands on the idle axis
+        assert all(r.idle_tail_mj >= 0.0 for r in res.racks.values())
+
+    def test_crash_restart_charges_bringup(self):
+        """One scheduled crash: watchdog detection → elastic restart,
+        charged as exactly one rack reconfiguration (the bring-up)."""
+        topo = _small_topology(devices_per_rack=4, model_axis=2)
+        victim = topo.racks()[0].name
+        counts = np.full(96, 2, dtype=np.int64)
+        res = run_hierarchy(
+            topo, counts, dt_ms=20.0, epoch_ticks=16,
+            faults=FaultSchedule((RackFault(victim, crash_tick=20, lost_devices=1),)),
+            heartbeat_timeout_s=0.3,
+        )
+        rk = res.racks[victim]
+        assert res.injector.n_crashes == 1 and res.injector.n_detected == 1
+        assert rk.n_restarts == 1 and rk.n_power_ons == 0
+        assert rk.bringup_energy_mj == topo.rack(victim).bringup_mj
+        # elastic shrink: 3 survivors, model_axis=2 → 2 usable, 1 parked
+        assert rk.usable_devices == 2 and rk.lost_devices == 1
+        res.assert_conserves()
+
+    def test_unrecoverable_rack_is_fenced(self):
+        """Losing too many devices for the model axis leaves the rack down
+        for good: no restart, no bring-up charge, traffic rerouted, and the
+        books still balance."""
+        topo = _small_topology(devices_per_rack=4, model_axis=2)
+        victim = topo.racks()[0].name
+        counts = np.full(96, 2, dtype=np.int64)
+        res = run_hierarchy(
+            topo, counts, dt_ms=20.0, epoch_ticks=16,
+            faults=FaultSchedule((RackFault(victim, crash_tick=20, lost_devices=3),)),
+            heartbeat_timeout_s=0.3,
+        )
+        rk = res.racks[victim]
+        assert rk.unrecoverable and not rk.powered
+        assert rk.n_restarts == 0 and rk.bringup_energy_mj == 0.0
+        assert rk.usable_devices == 0
+        # the surviving rack took the later traffic
+        other = [r for n, r in res.racks.items() if n != victim][0]
+        assert other.arrived > 0
+        res.assert_conserves()
+
+
+# ---------------------------------------------------------------------------
+# rack-level closed forms
+# ---------------------------------------------------------------------------
+class TestRackClosedForms:
+    def test_reconfig_energy_is_bringup_plus_child_configs(self):
+        topo = _small_topology()
+        spec = topo.racks()[0]
+        expect = spec.bringup_mj + float(np.sum(np.asarray(spec.params.e_config_mj)))
+        assert rack_reconfig_energy_mj(spec) == expect
+        assert rack_idle_power_mw(spec) == float(
+            np.sum(np.asarray(spec.params.p_idle_mw))
+        )
+
+    def test_break_even_and_crossover_edges(self):
+        assert rack_break_even_ms(10.0, 0.0) == math.inf
+        assert rack_break_even_ms(0.0, 50.0) == 0.0
+        assert rack_crossover_ms(0.0, 50.0, ready_ms=7.0) == 7.0
+        assert rack_crossover_ms(10.0, 100.0) == 100.0  # 10 mJ / 0.1 W
+
+    def test_rack_workload_item_round_trips_the_constants(self):
+        spec = _small_topology().racks()[0]
+        item = rack_workload_item(spec)
+        assert item.idle_power_mw == rack_idle_power_mw(spec)
+        assert item.config_energy_mj == pytest.approx(
+            rack_reconfig_energy_mj(spec), rel=1e-12
+        )
+        assert item.config_time_ms == spec.bringup_ms
+
+
+# ---------------------------------------------------------------------------
+# autoscaler no-flap (mirrors tests/test_adaptive.py::TestHysteresisNoFlap)
+# ---------------------------------------------------------------------------
+class TestAutoscalerNoFlap:
+    """Gaps oscillating ±ε around the rack crossover (ε inside the 10%
+    hysteresis band) must cause at most ONE power transition — the initial
+    lock-in — whether the rack is driven by the analytical crossover rule
+    or by a learned timeout policy."""
+
+    @pytest.fixture
+    def spec(self):
+        return _small_topology().racks()[0]
+
+    @pytest.mark.parametrize("eps", [0.02, 0.08])
+    def test_crossover_autoscaler_at_most_one_transition(self, spec, eps):
+        a = CrossoverAutoscaler.for_rack(spec)
+        cross = a.crossover_ms()
+        for i in range(400):
+            a.observe_gap(cross * (1.0 + (eps if i % 2 == 0 else -eps)))
+            a.idle_timeout_ms()          # the control loop queries every epoch
+        assert a.power_transitions <= 1
+
+    @pytest.mark.parametrize("eps", [0.02, 0.08])
+    def test_learned_policy_autoscaler_at_most_one_transition(self, spec, eps):
+        from repro.policy import LearnedTimeoutPolicy, untrained_policy
+
+        item = rack_workload_item(spec)
+        trained = untrained_policy(item)
+        pol = LearnedTimeoutPolicy(
+            trained, item=item, idle_power_mw=rack_idle_power_mw(spec)
+        )
+        pa = PolicyAutoscaler(pol)
+        cross = pol.crossover_ms()
+        for i in range(400):
+            pa.observe_gap(cross * (1.0 + (eps if i % 2 == 0 else -eps)))
+            pa.idle_timeout_ms()
+        assert pa.power_transitions <= 1
+
+    def test_crossover_autoscaler_clear_regimes(self, spec):
+        """Well outside the band the decisions are the paper's: short gaps
+        → stay resident (∞ timeout), long gaps → power off (0 timeout)."""
+        short = CrossoverAutoscaler.for_rack(spec)
+        for _ in range(10):
+            short.observe_gap(short.crossover_ms() * 0.3)
+        assert short.idle_timeout_ms() == math.inf
+
+        long = CrossoverAutoscaler.for_rack(spec)
+        for _ in range(10):
+            long.observe_gap(long.crossover_ms() * 3.0)
+        assert long.idle_timeout_ms() == 0.0
+
+    def test_warmup_uses_break_even(self, spec):
+        a = CrossoverAutoscaler.for_rack(spec, min_observations=5)
+        a.observe_gap(1.0)
+        assert a.idle_timeout_ms() == a.break_even_ms()
+
+
+# ---------------------------------------------------------------------------
+# autoscaling inside the hierarchy: night power-off, flash-crowd power-on
+# ---------------------------------------------------------------------------
+class TestAutoscaledHierarchy:
+    def test_night_powers_off_flash_powers_on(self):
+        """The walkthrough scenario, asserted tightly: one rack rides
+        through the night powered off (keep_min holds the other), the flash
+        crowd brings it back, and every contract still holds."""
+        topo = _small_topology()
+        day = np.full(64, 4, dtype=np.int64)
+        night = np.zeros(64, dtype=np.int64)
+        flash = np.full(32, 12, dtype=np.int64)
+        counts = np.concatenate([day, night, flash])
+        res = run_hierarchy(
+            topo, counts, dt_ms=50.0, epoch_ticks=16,
+            autoscaler_factory=CrossoverAutoscaler.for_rack,
+        )
+        offs = {n: r.n_power_offs for n, r in res.racks.items()}
+        ons = {n: r.n_power_ons for n, r in res.racks.items()}
+        assert sum(offs.values()) == 1 and sum(ons.values()) == 1
+        # keep_min=1: exactly one rack stayed up all night
+        assert sorted(offs.values()) == [0, 1]
+        cycled = [n for n, v in offs.items() if v == 1][0]
+        assert ons[cycled] == 1
+        assert res.racks[cycled].bringup_energy_mj == topo.rack(cycled).bringup_mj
+        res.assert_conserves()
+
+    def test_idle_tail_makes_always_on_pay_for_the_night(self):
+        """With the lazy-idle close-out enabled, powering a rack off at
+        night must beat keeping both racks resident — the paper's trade-off
+        at rack scale (without the close-out the night would look free)."""
+        topo = uniform_topology(
+            1, 2, 4, strategies=("idle_waiting",),
+            request_period_ms=100.0, bringup_ms=100.0, bringup_mj=50.0,
+        )
+        # day demand overflows the first rack's per-tick capacity (4), so
+        # pack routing warms the second rack too — both are resident and
+        # drawing idle power when the night starts
+        day = np.full(64, 6, dtype=np.int64)
+        night = np.zeros(192, dtype=np.int64)
+        counts = np.concatenate([day, night])
+        kwargs = dict(
+            dt_ms=50.0, epoch_ticks=16,
+            rack_routing="pack", charge_idle_tail=True,
+        )
+        always_on = run_hierarchy(topo, counts, **kwargs)
+        scaled = run_hierarchy(
+            topo, counts, autoscaler_factory=CrossoverAutoscaler.for_rack, **kwargs
+        )
+        always_on.assert_conserves()
+        scaled.assert_conserves()
+        assert sum(r.n_power_offs for r in scaled.racks.values()) >= 1
+        assert scaled.total_energy_mj < always_on.total_energy_mj

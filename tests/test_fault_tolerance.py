@@ -35,6 +35,27 @@ class TestHeartbeat:
         assert set(m.alive_nodes()) == {"n0", "n1"}
 
 
+class TestHeartbeatRevival:
+    def test_beat_revives_dead_node(self):
+        """Detection is last-beat-based: a node that resumes beating after
+        being declared dead is alive again (the control plane re-admits it)."""
+        clock = FakeClock()
+        m = HeartbeatMonitor(["n0", "n1"], timeout_s=10, clock=clock)
+        clock.advance(11)
+        assert set(m.dead_nodes()) == {"n0", "n1"}
+        m.beat("n0")
+        assert m.dead_nodes() == ["n1"]
+        assert m.alive_nodes() == ["n0"]
+
+    def test_exactly_at_timeout_is_alive(self):
+        clock = FakeClock()
+        m = HeartbeatMonitor(["n0"], timeout_s=10, clock=clock)
+        clock.advance(10)
+        assert m.dead_nodes() == []
+        clock.advance(1e-6)
+        assert m.dead_nodes() == ["n0"]
+
+
 class TestStraggler:
     def test_outlier_flagged(self):
         d = StragglerDetector(window=4, k=2.0)
@@ -47,6 +68,19 @@ class TestStraggler:
         d = StragglerDetector()
         for n in ("n0", "n1"):
             d.record(n, 1.0)
+        assert d.stragglers() == []
+
+    def test_window_forgets_old_slowness(self):
+        """A node that was slow but recovered ages out of the window and is
+        no longer flagged — the detector reacts to current behavior."""
+        d = StragglerDetector(window=3, k=2.0)
+        for n in ("n0", "n1", "n2"):
+            d.record(n, 1.0)
+        d.record("n2", 9.0)                 # one slow step
+        assert d.stragglers() == ["n2"]
+        for _ in range(3):                  # recovery fills the window
+            for n in ("n0", "n1", "n2"):
+                d.record(n, 1.0)
         assert d.stragglers() == []
 
 
@@ -87,6 +121,77 @@ class TestWatchdog:
 
         assert w.run(quick) == 42
         assert w.timeouts == 0
+
+    def test_zero_retries_escalates_immediately(self):
+        clock = FakeClock()
+        failures = []
+        w = StepWatchdog(
+            deadline_s=1.0, max_retries=0,
+            on_failure=lambda: failures.append(1), clock=clock,
+        )
+
+        def slow():
+            clock.advance(2.0)
+            return "r"
+
+        assert w.run(slow) == "r"
+        assert w.timeouts == 1
+        assert failures == [1]
+
+    def test_recovery_on_retry_skips_escalation(self):
+        """A timeout followed by an in-deadline re-dispatch must NOT call
+        the elastic-restart callback — only exhausted retries escalate."""
+        clock = FakeClock()
+        failures = []
+        durations = iter([5.0, 0.1])
+
+        def step():
+            clock.advance(next(durations))
+            return "ok"
+
+        w = StepWatchdog(
+            deadline_s=1.0, max_retries=1,
+            on_failure=lambda: failures.append(1), clock=clock,
+        )
+        assert w.run(step) == "ok"
+        assert w.timeouts == 1
+        assert failures == []
+
+
+class TestRestartCharging:
+    def test_elastic_restart_charged_as_rack_reconfiguration(self):
+        """Through the control plane: rack crash → heartbeat detection →
+        elastic restart, charged once as the rack's configuration phase
+        (the bring-up energy on the ledger's configure axis)."""
+        import numpy as np
+
+        from repro.control import (
+            FaultSchedule,
+            RackFault,
+            run_hierarchy,
+            uniform_topology,
+        )
+
+        topo = uniform_topology(
+            1, 2, 2, request_period_ms=80.0,
+            bringup_ms=40.0, bringup_mj=12.5,
+        )
+        victim = topo.racks()[0].name
+        res = run_hierarchy(
+            topo, np.full(64, 1, dtype=np.int64), dt_ms=20.0, epoch_ticks=16,
+            faults=FaultSchedule((RackFault(victim, crash_tick=10),)),
+            heartbeat_timeout_s=0.3,
+        )
+        rk = res.racks[victim]
+        assert rk.n_restarts == 1 and rk.n_power_ons == 0
+        assert rk.bringup_energy_mj == 12.5
+        # the charge lands on the configure axis of the rack roll-up, on
+        # top of whatever the devices paid for their own bitstream loads
+        device_cfg = rk.device_ledger().aggregate().to_dict()["configure_mj"]
+        assert rk.ledger().to_dict()["configure_mj"] == pytest.approx(
+            device_cfg + 12.5, rel=1e-12
+        )
+        res.assert_conserves()
 
 
 class TestRestartPath:

@@ -120,6 +120,46 @@ def test_paths_agree(quantities, name):
     )
 
 
+class TestRackCrossoverRecursion:
+    """The idle-vs-off rule is scale-free (ISSUE 10): a rack whose bring-up
+    energy and ready latency are scaled copies of the paper device's
+    constants — with the same 24 mW idle draw — has a rack crossover of
+    exactly ``scale × 499.06 ms``.  Power-of-two scales commute with fp
+    rounding, so those cases are pinned bit-exact; odd scales to 1e-12."""
+
+    @pytest.fixture(scope="class")
+    def device_constants(self):
+        item = paper_lstm_item()
+        delta_e = em.onoff_item_energy_mj(item, CAL) - em.idlewait_item_energy_mj(item)
+        t_lat = em.idlewait_latency_ms(item)
+        return delta_e, t_lat, em.crossover_period_ms(item, IDLE_M12_MW, CAL)
+
+    def test_scale_one_is_the_device_crossover(self, device_constants):
+        from repro.control import rack_crossover_ms
+
+        delta_e, t_lat, base = device_constants
+        got = rack_crossover_ms(delta_e, IDLE_M12_MW, t_lat)
+        assert got == base                       # op-for-op the same form
+        assert got == pytest.approx(499.06, rel=1e-3)
+
+    @pytest.mark.parametrize("scale", [2, 8, 64])
+    def test_power_of_two_scales_exact(self, device_constants, scale):
+        from repro.control import rack_crossover_ms
+
+        delta_e, t_lat, base = device_constants
+        got = rack_crossover_ms(scale * delta_e, IDLE_M12_MW, scale * t_lat)
+        assert got == scale * base               # bit-exact, not approx
+        assert got == pytest.approx(scale * 499.06, rel=1e-3)
+
+    @pytest.mark.parametrize("scale", [3, 7, 1000])
+    def test_general_scales_track_to_1e12(self, device_constants, scale):
+        from repro.control import rack_crossover_ms
+
+        delta_e, t_lat, base = device_constants
+        got = rack_crossover_ms(scale * delta_e, IDLE_M12_MW, scale * t_lat)
+        assert got == pytest.approx(scale * base, rel=1e-12)
+
+
 def test_anchor_params_are_the_extremes():
     """The worst/best anchors are realized exactly at the Table-1 corner
     settings the paper names (single/3 MHz/raw and quad/66 MHz/compressed)."""

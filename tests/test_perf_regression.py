@@ -89,6 +89,19 @@ def test_check_bench_json_policy_field():
     assert not missing["ok"] and "missing field" in missing["error"]
 
 
+def test_check_bench_json_control_field():
+    good = {"kind": "control",
+            "throughput": {"hierarchy": {"device_ticks_per_s": 1e9}}}
+    assert pr.check_bench_json(good, scale=1.0)[0]["ok"]
+    bad = {"kind": "control",
+           "throughput": {"hierarchy": {"device_ticks_per_s": 1.0}}}
+    rec = pr.check_bench_json(bad, scale=1.0)[0]
+    assert not rec["ok"]
+    assert rec["name"] == "bench_control_device_ticks_per_s"
+    missing = pr.check_bench_json({"kind": "control"}, scale=1.0)[0]
+    assert not missing["ok"] and "missing field" in missing["error"]
+
+
 def test_missing_throughput_field_fails_explicitly():
     recs = pr.check_bench_json({"kind": "fleet"}, scale=1.0)
     assert len(recs) == 2
